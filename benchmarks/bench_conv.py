@@ -1,0 +1,168 @@
+"""2D-convolution case study — paper section V (Figs. 4, 5, 6; Tables II, III).
+
+All searches run on the TPU analytical evaluator (seeded noise), the CPU
+stand-in for the paper's wall-clock GPU measurements; the Pallas kernels
+themselves are verified against the jnp oracle in tests/.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs import PAPER_BUDGETS, PAPER_CONV
+from repro.core import (PROFILES, TPU_V3, TPU_V5E, TPUAnalyticalEvaluator,
+                        make_strategy)
+from repro.kernels.conv2d import conv_flops, make_tuner
+
+from .common import RUNS, Timer, emit, save_json, summarize
+
+H, W = PAPER_CONV["image"]
+FILTERS = PAPER_CONV["filters"]
+BUDGET = PAPER_BUDGETS["conv"]           # 107 = 1/32 of the paper's space
+PROFILE_SET = ("tpu_v5e", "tpu_v3")
+
+STRATEGIES = {
+    "random": {},
+    "annealing_T2": {"temperature": 2.0},
+    "annealing_T4": {"temperature": 4.0},
+    "annealing_T6": {"temperature": 6.0},
+    "pso_S3": {"swarm_size": 3},
+    "pso_S6": {"swarm_size": 6},
+}
+
+
+def _tuner(profile, fh, fw, noise=0.03, seed=0):
+    return make_tuner(H, W, fh, fw,
+                      evaluator=TPUAnalyticalEvaluator(
+                          profile=profile, noise_sigma=noise, seed=seed),
+                      extended_space=True)
+
+
+def _strategy(name, seed):
+    base = name.split("_")[0]
+    kw = dict(STRATEGIES[name])
+    return make_strategy({"annealing": "annealing", "pso": "pso",
+                          "random": "random"}[base], **kw)
+
+
+def best_known(profile, fh, fw) -> float:
+    """Noise-free full search: the reference optimum."""
+    t = _tuner(profile, fh, fw, noise=0.0)
+    return t.tune(strategy="full").best_time
+
+
+def fig4_search_progress() -> None:
+    """Fig. 4: best-so-far traces of 3 runs per strategy (7x7, v5e)."""
+    traces = {}
+    with Timer() as tm:
+        for name in ("random", "annealing_T4", "pso_S3"):
+            runs = []
+            for seed in range(3):
+                t = _tuner(TPU_V5E, 7, 7, seed=seed)
+                out = t.tune(strategy=_strategy(name, seed), budget=BUDGET,
+                             seed=seed)
+                runs.append(out.result.progress_trace())
+            traces[name] = runs
+    save_json("fig4_conv_traces", traces)
+    emit("fig4_search_progress", tm.dt * 1e6 / (3 * 3 * BUDGET),
+         f"3 strategies x 3 runs x {BUDGET} evals")
+
+
+def fig5_strategy_statistics() -> None:
+    """Fig. 5: distribution of best-found over RUNS searches per strategy."""
+    results: Dict[str, Dict] = {}
+    with Timer() as tm:
+        for pname in PROFILE_SET:
+            profile = PROFILES[pname]
+            ref = best_known(profile, 7, 7)
+            # distribution of the whole space (the paper's orange violin)
+            space_out = _tuner(profile, 7, 7, noise=0.0).tune(strategy="full")
+            space_perf = [ref / tr.time for tr in space_out.result.trials
+                          if tr.ok and math.isfinite(tr.time)]
+            results[f"{pname}/space"] = summarize(space_perf)
+            for sname in STRATEGIES:
+                finals = []
+                for seed in range(RUNS):
+                    t = _tuner(profile, 7, 7, seed=seed)
+                    out = t.tune(strategy=_strategy(sname, seed),
+                                 budget=BUDGET, seed=seed)
+                    finals.append(ref / out.best_time)   # perf rel. to best
+                results[f"{pname}/{sname}"] = summarize(finals)
+    save_json("fig5_conv_strategy_stats", results)
+    for k, v in results.items():
+        emit(f"fig5/{k}", 0.0,
+             f"rel_perf mean={v['mean']:.3f} std={v['std']:.3f} "
+             f"min={v['min']:.3f}")
+    emit("fig5_total", tm.dt * 1e6, f"runs={RUNS}")
+
+
+def table2_best_parameters() -> Dict:
+    """Table II: best parameters per filter size per device (full search)."""
+    table = {}
+    with Timer() as tm:
+        for pname in PROFILE_SET:
+            for (fh, fw) in FILTERS:
+                t = _tuner(PROFILES[pname], fh, fw, noise=0.0)
+                out = t.tune(strategy="full")
+                gf = conv_flops(H, W, fh, fw) / out.best_time / 1e9
+                table[f"{pname}/{fh}x{fw}"] = {
+                    "config": out.best_config, "time_us": out.best_time * 1e6,
+                    "gflops": gf}
+                emit(f"table2/{pname}/{fh}x{fw}", out.best_time * 1e6,
+                     f"GFLOPS={gf:.0f} cfg={out.best_config}")
+    save_json("table2_conv_best", table)
+    emit("table2_total", tm.dt * 1e6, "")
+    return table
+
+
+def table3_filter_size_transfer(table=None) -> None:
+    """Table III: run filter A's best config on filter B (paper: up to 56%
+    loss when running 11x11 with 3x3-tuned parameters)."""
+    from repro.kernels.conv2d import analytical_time
+    table = table or table2_best_parameters()
+    out = {}
+    for pname in PROFILE_SET:
+        profile = PROFILES[pname]
+        for (fa, _) in FILTERS:
+            cfg = table[f"{pname}/{fa}x{fa}"]["config"]
+            for (fb, _) in FILTERS:
+                t_best = table[f"{pname}/{fb}x{fb}"]["time_us"] * 1e-6
+                t_cross = analytical_time(cfg, profile, H, W, fb, fb)
+                rel = t_best / t_cross if math.isfinite(t_cross) else 0.0
+                out[f"{pname}/best_{fa}_on_{fb}"] = rel
+                emit(f"table3/{pname}/best{fa}x{fa}_on_{fb}x{fb}", 0.0,
+                     f"relative_perf={rel:.2f}")
+    save_json("table3_filter_transfer", out)
+
+
+def fig6_roofline_fractions() -> None:
+    """Fig. 6: tuned conv as a fraction of peak GFLOPS and bandwidth."""
+    from repro.kernels.conv2d import conv_bytes
+    rows = {}
+    for pname in PROFILE_SET:
+        profile = PROFILES[pname]
+        for (fh, fw) in FILTERS:
+            t = _tuner(profile, fh, fw, noise=0.0)
+            out = t.tune(strategy="full")
+            gflops = conv_flops(H, W, fh, fw) / out.best_time
+            gbs = conv_bytes(H, W) / out.best_time
+            rows[f"{pname}/{fh}x{fw}"] = {
+                "pct_peak_flops": gflops / profile.peak_flops,
+                "pct_peak_bw": gbs / profile.hbm_bw}
+            emit(f"fig6/{pname}/{fh}x{fw}", out.best_time * 1e6,
+                 f"pct_flops={gflops / profile.peak_flops:.1%} "
+                 f"pct_bw={gbs / profile.hbm_bw:.1%}")
+    save_json("fig6_conv_roofline", rows)
+
+
+def main() -> None:
+    fig4_search_progress()
+    fig5_strategy_statistics()
+    t2 = table2_best_parameters()
+    table3_filter_size_transfer(t2)
+    fig6_roofline_fractions()
+
+
+if __name__ == "__main__":
+    main()

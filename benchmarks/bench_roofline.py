@@ -1,0 +1,69 @@
+"""Roofline table from the multi-pod dry-run artifacts (assignment (g)).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the per-cell roofline terms; writes the markdown table consumed by
+EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit, save_json
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def markdown_table(recs) -> str:
+    head = ("| arch | shape | compute_t (s) | memory_t (s) | coll_t (s) | "
+            "dominant | model/HLO flops | roofline frac | mem GiB |")
+    sep = "|" + "---|" * 9
+    rows = [head, sep]
+    for r in recs:
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_bytes_per_device", 0) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_t']:.4f} | "
+            f"{rf['memory_t']:.4f} | {rf['collective_t']:.4f} | "
+            f"{rf['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{rf.get('roofline_fraction', 0):.3f} | {mem:.1f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        if not recs:
+            emit(f"roofline_{mesh}", 0.0, "no dry-run artifacts yet")
+            continue
+        for r in recs:
+            rf = r["roofline"]
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 rf["step_t"] * 1e6,
+                 f"dom={rf['dominant']} "
+                 f"frac={rf.get('roofline_fraction', 0):.3f} "
+                 f"useful={r['useful_flops_ratio']:.2f}")
+        table = markdown_table(recs)
+        save_json(f"roofline_{mesh}", {"table": table,
+                                       "cells": len(recs)})
+        with open(os.path.join(os.path.dirname(DRYRUN_DIR) or ".",
+                               f"roofline_{mesh}.md"), "w") as f:
+            f.write(table + "\n")
+        emit(f"roofline_{mesh}_cells", 0.0, f"{len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

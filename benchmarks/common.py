@@ -1,0 +1,44 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+#: scale factor for statistical experiments (paper uses 128 runs; CI uses
+#: fewer).  REPRO_BENCH_RUNS=128 reproduces the paper's statistics.
+RUNS = int(os.environ.get("REPRO_BENCH_RUNS", "16"))
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Benchmark output contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def summarize(values: List[float]) -> Dict[str, float]:
+    a = np.asarray(values, dtype=np.float64)
+    return {"mean": float(a.mean()), "std": float(a.std()),
+            "min": float(a.min()), "max": float(a.max()),
+            "median": float(np.median(a)), "n": len(a)}
+
+
+def save_json(name: str, payload) -> str:
+    import json
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

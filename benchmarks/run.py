@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Env knobs:
+  REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
+  REPRO_BENCH_ONLY   comma-separated subset (conv,gemm,roofline,wallclock)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
+    wanted = set(only.split(",")) if only else None
+    sections = []
+    from . import bench_conv, bench_gemm, bench_roofline, bench_wallclock
+    table = {
+        "conv": bench_conv.main,          # paper §V: Figs 4/5/6, Tables II/III
+        "gemm": bench_gemm.main,          # paper §VI: Fig 7, Table IV, Fig 9
+        "roofline": bench_roofline.main,  # assignment §Roofline (dry-run)
+        "wallclock": bench_wallclock.main,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in table.items():
+        if wanted and name not in wanted:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"section/{name},{(time.perf_counter() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"section/{name},0,ERROR:{e}")
+            sections.append(name)
+    if sections:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

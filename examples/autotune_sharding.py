@@ -1,0 +1,41 @@
+"""Beyond the paper: auto-tune the *distributed* configuration of a cell.
+
+Applies CLTune's machinery (search space + SA/greedy search + measured
+objective) to the 256-chip sharding/remat/microbatch space of one
+(architecture x input shape) cell.  The objective is the roofline step time
+extracted from the compiled dry-run — no hardware needed.
+
+WARNING: each evaluation lowers+compiles reduced-depth model variants
+(tens of seconds on CPU).  Keep budgets small interactively.
+
+Run:  PYTHONPATH=src python examples/autotune_sharding.py \
+          --arch mamba2-130m --shape train_4k --budget 6
+"""
+
+import argparse
+import json
+
+from repro.tune import tune_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--strategy", default="greedy",
+                    choices=["greedy", "random", "annealing", "pso"])
+    ap.add_argument("--budget", type=int, default=6)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/tune/example.json")
+    args = ap.parse_args()
+
+    summary = tune_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                        strategy=args.strategy, budget=args.budget,
+                        out_path=args.out)
+    print(json.dumps({k: v for k, v in summary.items() if k != "log"},
+                     indent=2, default=str))
+    print(f"\nfull evaluation log -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

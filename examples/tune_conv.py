@@ -1,0 +1,37 @@
+"""2D-convolution auto-tuning per filter size — paper section V.
+
+Shows scenario 3 of the paper: optimal parameters change with the input
+(filter size), and running one size's best config on another loses up to
+tens of percent (Table III).
+
+Run:  PYTHONPATH=src python examples/tune_conv.py
+"""
+
+from repro.core import TPU_V5E, TPUAnalyticalEvaluator
+from repro.kernels.conv2d import analytical_time, make_tuner
+
+H, W = 8192, 4096          # the paper's image
+
+
+def main():
+    best = {}
+    for f in (3, 7, 11):
+        tuner = make_tuner(H, W, f, f,
+                           evaluator=TPUAnalyticalEvaluator(
+                               profile=TPU_V5E, noise_sigma=0.0))
+        out = tuner.tune(strategy="full")
+        best[f] = out.best_config
+        print(f"filter {f:2d}x{f:2d}: best={out.best_time * 1e6:8.1f} us "
+              f"cfg={out.best_config}")
+
+    print("\ncross-filter transfer (paper Table III):")
+    for fa in (3, 7, 11):
+        for fb in (3, 7, 11):
+            t_best = analytical_time(best[fb], TPU_V5E, H, W, fb, fb)
+            t_cross = analytical_time(best[fa], TPU_V5E, H, W, fb, fb)
+            print(f"  best[{fa:2d}x{fa:<2d}] on {fb:2d}x{fb:<2d}: "
+                  f"{t_best / t_cross:5.1%} of tuned performance")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""GEMM auto-tuning — the paper's section VI case study on TPU profiles.
+
+Explores the >200k-configuration space with simulated annealing and PSO on
+four TPU device profiles, showing (a) strategies beat random search,
+(b) best configurations differ per device (paper Table IV), and (c) the
+tuned configuration lands in the results cache that ``repro.kernels.matmul
+.matmul`` consults at run time.
+
+Run:  PYTHONPATH=src python examples/tune_gemm.py [--budget 117]
+"""
+
+import argparse
+
+from repro.core import PROFILES, TPUAnalyticalEvaluator
+from repro.kernels.matmul import make_tuner, shape_key
+
+M = N = K = 2048
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=117)   # paper: 1/2048
+    ap.add_argument("--profiles", default="tpu_v5e,tpu_v3")
+    args = ap.parse_args()
+
+    for pname in args.profiles.split(","):
+        profile = PROFILES[pname]
+        print(f"\n=== {pname}: GEMM {M}x{N}x{K}, budget {args.budget} ===")
+        for strategy, kw in [("random", {}),
+                             ("annealing", {"temperature": 4.0}),
+                             ("pso", {"swarm_size": 3})]:
+            tuner = make_tuner(
+                M, N, K, extended_space=True,
+                evaluator=TPUAnalyticalEvaluator(profile=profile, seed=0),
+                profile=profile)
+            out = tuner.tune(strategy=strategy, budget=args.budget, seed=0,
+                             record_to_cache=(strategy == "annealing"),
+                             shape_key=shape_key(M, N, K), **kw)
+            gf = 2.0 * M * N * K / out.best_time / 1e9
+            print(f"  {strategy:10s} best={out.best_time * 1e6:9.1f} us "
+                  f"({gf:7.0f} GFLOPS)  {out.best_config}")
+
+
+if __name__ == "__main__":
+    main()

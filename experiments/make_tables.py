@@ -1,0 +1,63 @@
+"""Generate EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}.json"))):
+        r = json.load(open(p))
+        if r.get("status") == "ok":
+            out.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    out.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return out
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute_t s | memory_t s | coll_t s | dominant"
+            " | MODEL/HLO flops | roofline frac | HBM GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_bytes_per_device", 0) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_t']:.4f} | "
+            f"{rf['memory_t']:.4f} | {rf['collective_t']:.4f} | "
+            f"{rf['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{rf.get('roofline_fraction', 0):.4f} | {mem:.1f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | lower s | compile s | flops/chip | "
+            "bytes/chip | coll bytes/chip | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        cc = r.get("collective_counts", {})
+        cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                        for k, v in cc.items() if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['lower_s']} | "
+            f"{r['compile_s']} | {r['flops_per_chip']:.2e} | "
+            f"{r['bytes_per_chip']:.2e} | "
+            f"{r['collective_bytes_per_chip']:.2e} | {cstr or '-'} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        recs = load(mesh)
+        with open(os.path.join(os.path.dirname(__file__),
+                               f"roofline_{mesh}.md"), "w") as f:
+            f.write(roofline_table(recs) + "\n")
+        with open(os.path.join(os.path.dirname(__file__),
+                               f"dryrun_{mesh}.md"), "w") as f:
+            f.write(dryrun_table(recs) + "\n")
+        print(f"{mesh}: {len(recs)} cells")

@@ -1,0 +1,220 @@
+"""Checkpointing: atomic, async, retention-managed, mesh-elastic.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json       # tree structure, shapes, dtypes, step, config
+        arrays.npz          # flat path -> ndarray
+
+Durability discipline:
+  * writes go to ``step_XXXXXX.tmp`` then os.replace -> crash-safe (a torn
+    write never shadows a good checkpoint);
+  * ``latest_step`` scans for *complete* directories only (manifest present);
+  * async mode hands the (host-transferred) arrays to a writer thread so the
+    train loop is not blocked by disk I/O;
+  * restore works onto ANY mesh: arrays are saved unsharded (global view)
+    and re-placed with the target sharding on load — elastic re-scaling.
+
+Restore-with-resharding at 1000-node scale would write per-shard files with
+a global index; the manifest format carries the metadata needed for that
+(shapes/dtypes/paths) so the storage layer can swap in without touching
+callers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{6,})$")
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}" if prefix else k))
+        return out
+    if isinstance(tree, (tuple, list)) or hasattr(tree, "_fields"):
+        seq = tuple(tree)
+        for i, v in enumerate(seq):
+            out.update(_flatten(v, f"{prefix}/#{i}" if prefix else f"#{i}"))
+        return out
+    out[prefix or "value"] = tree
+    return out
+
+
+def _unflatten_into(template: Any, flat: Dict[str, Any],
+                    prefix: str = "") -> Any:
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat,
+                                   f"{prefix}/{k}" if prefix else k)
+                for k in template}
+    if hasattr(template, "_fields"):               # NamedTuple
+        vals = [_unflatten_into(v, flat,
+                                f"{prefix}/#{i}" if prefix else f"#{i}")
+                for i, v in enumerate(tuple(template))]
+        return type(template)(*vals)
+    if isinstance(template, (tuple, list)):
+        vals = [_unflatten_into(v, flat,
+                                f"{prefix}/#{i}" if prefix else f"#{i}")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    return flat[prefix or "value"]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._error: Optional[Exception] = None
+
+    # -- inventory -----------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:06d}")
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None,
+             block: bool = True) -> None:
+        """Checkpoint ``tree`` (pytree of arrays) at ``step``."""
+        self.wait()                                   # one writer at a time
+        flat = _flatten(tree)
+        # device -> host transfer happens here (the synchronous part);
+        # disk I/O can then go async.  Narrow float dtypes (bfloat16, fp8)
+        # are not native numpy types: store them widened to float32 — an
+        # exact (lossless) embedding — and record the true dtype in the
+        # manifest for bit-exact restore.
+        host, dtypes = {}, {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            dtypes[k] = str(a.dtype)
+            if a.dtype.kind == "V" or str(a.dtype) in (
+                    "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+                a = a.astype(np.float32)
+            host[k] = a
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "arrays": {k: {"shape": list(v.shape), "dtype": dtypes[k]}
+                       for k, v in host.items()},
+            "extra": extra or {},
+        }
+
+        def write():
+            try:
+                final = self._path(step)
+                tmp = final + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                np.savez(os.path.join(tmp, "arrays.npz"), **host)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f, indent=2)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)                # atomic publish
+                self._gc()
+            except Exception as e:  # noqa: BLE001
+                self._error = e
+
+        if self.async_save and not block:
+            self._writer = threading.Thread(target=write, daemon=True)
+            self._writer.start()
+        else:
+            write()
+            self._raise_pending()
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {e}") from e
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, template: Any = None,
+                shardings: Any = None) -> Dict[str, Any]:
+        """Load a checkpoint.
+
+        ``template`` (pytree) reconstructs structure; ``shardings`` (pytree
+        of NamedSharding, same structure) re-places arrays onto the target
+        mesh — restoring onto a different mesh than the one that saved is
+        supported (elastic re-scaling).
+        Returns {"step", "tree", "extra"}.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = self._path(step)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {}
+            for k in z.files:
+                a = z[k]
+                want = manifest["arrays"].get(k, {}).get("dtype")
+                if want and str(a.dtype) != want:
+                    a = a.astype(jax.numpy.dtype(want))   # bf16/fp8 restore
+                flat[k] = a
+        if template is None:
+            tree = flat
+        else:
+            tree = _unflatten_into(template, flat)
+            if shardings is not None:
+                tree = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings)
+        return {"step": manifest["step"], "tree": tree,
+                "extra": manifest.get("extra", {})}
+
+    def verify(self, step: int) -> bool:
+        """Integrity check: manifest arrays all present with right shapes."""
+        path = self._path(step)
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                for k, meta in manifest["arrays"].items():
+                    if k not in z.files:
+                        return False
+                    if list(z[k].shape) != meta["shape"]:
+                        return False
+            return True
+        except Exception:  # noqa: BLE001
+            return False

@@ -1,0 +1,41 @@
+"""repro.core — the paper's contribution: a generic auto-tuner.
+
+Public API surface (the CLTune analogue):
+
+    from repro.core import Tuner, Parameter, SearchSpace
+    from repro.core import WallClockEvaluator, CostModelEvaluator, \
+        TPUAnalyticalEvaluator
+    from repro.core import make_strategy, TPU_V5E
+"""
+
+from .cache import CacheEntry, TuningCache, default_cache
+from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
+                         Measurement, TPUAnalyticalEvaluator,
+                         WallClockEvaluator, make_evaluator)
+from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
+from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
+                       DeviceProfile, get_profile)
+from .space import Config, Constraint, Parameter, SearchSpace
+from .strategies import (Evolutionary, FullSearch,
+                         GreedyCoordinateDescent, ParticleSwarm,
+                         RandomSearch, SearchResult, SimulatedAnnealing,
+                         Strategy, Trial, available_strategies,
+                         make_strategy, register_strategy)
+from .tuner import Tuner, TuningOutcome
+from .verify import VerificationError, assert_trees_close, trees_close
+
+__all__ = [
+    "CacheEntry", "TuningCache", "default_cache",
+    "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
+    "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
+    "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
+    "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
+    "DeviceProfile", "get_profile",
+    "Config", "Constraint", "Parameter", "SearchSpace",
+    "Evolutionary", "FullSearch", "GreedyCoordinateDescent",
+    "ParticleSwarm", "RandomSearch",
+    "SearchResult", "SimulatedAnnealing", "Strategy", "Trial",
+    "available_strategies", "make_strategy", "register_strategy",
+    "Tuner", "TuningOutcome",
+    "VerificationError", "assert_trees_close", "trees_close",
+]

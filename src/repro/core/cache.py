@@ -1,0 +1,116 @@
+"""Persistent tuning-results cache.
+
+CLTune scenario 3 ("the optimal parameters change based on input arguments")
+implies a database of best-found configurations keyed by kernel, input shape
+and device.  This is that database: a JSON file the framework consults at
+run time (``kernels/*/ops.py`` look tuned block sizes up here) and that the
+tuner writes into after a search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional
+
+_DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "tune",
+                             "tuned_configs.json")
+
+
+def _key(kernel: str, shape_key: str, profile: str) -> str:
+    return f"{kernel}|{shape_key}|{profile}"
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    config: Dict[str, Any]
+    time_s: float
+    strategy: str
+    evaluations: int
+    timestamp: float
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "CacheEntry":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+class TuningCache:
+    """Thread-safe JSON-backed map: (kernel, shape, profile) -> best config."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.abspath(path or _DEFAULT_PATH)
+        self._lock = threading.Lock()
+        self._data: Dict[str, Dict[str, Any]] = {}
+        self._loaded = False
+
+    # -- persistence ---------------------------------------------------------
+    def load(self) -> "TuningCache":
+        with self._lock:
+            if os.path.exists(self.path):
+                with open(self.path, "r") as f:
+                    self._data = json.load(f)
+            self._loaded = True
+        return self
+
+    def save(self) -> None:
+        with self._lock:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            # atomic write: temp file + rename, same discipline as checkpoints
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._data, f, indent=2, sort_keys=True)
+                os.replace(tmp, self.path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+
+    def _ensure(self) -> None:
+        if not self._loaded:
+            self.load()
+
+    # -- access ---------------------------------------------------------------
+    def get(self, kernel: str, shape_key: str, profile: str) -> Optional[CacheEntry]:
+        self._ensure()
+        raw = self._data.get(_key(kernel, shape_key, profile))
+        return CacheEntry.from_json(raw) if raw else None
+
+    def put(self, kernel: str, shape_key: str, profile: str,
+            entry: CacheEntry, only_if_better: bool = True) -> bool:
+        self._ensure()
+        k = _key(kernel, shape_key, profile)
+        with self._lock:
+            old = self._data.get(k)
+            if only_if_better and old and old["time_s"] <= entry.time_s:
+                return False
+            self._data[k] = entry.to_json()
+        return True
+
+    def entries(self) -> Dict[str, CacheEntry]:
+        self._ensure()
+        return {k: CacheEntry.from_json(v) for k, v in self._data.items()}
+
+    def record(self, kernel: str, shape_key: str, profile: str,
+               config: Dict[str, Any], time_s: float, strategy: str,
+               evaluations: int) -> bool:
+        return self.put(kernel, shape_key, profile, CacheEntry(
+            config=config, time_s=time_s, strategy=strategy,
+            evaluations=evaluations, timestamp=time.time()))
+
+
+_default_cache: Optional[TuningCache] = None
+
+
+def default_cache() -> TuningCache:
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = TuningCache()
+    return _default_cache

@@ -1,0 +1,115 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
+collective traffic, so we parse the (stable)HLO/HLO text for the five
+collective ops and sum their result sizes.  Used by the roofline pipeline
+(launch/dryrun.py) and by the CostModelEvaluator that scores distributed
+configurations for the sharding auto-tuner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Tuple
+
+# bytes per element for HLO dtypes
+_DTYPE_BYTES: Dict[str, int] = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# collective op name -> bytes multiplier relative to the result size.  A ring
+# all-reduce moves ~2x the buffer (reduce-scatter + all-gather phases); the
+# others move ~1x.  This is the standard cost model used for roofline
+# collective terms.
+COLLECTIVE_OPS: Dict[str, float] = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g.  bf16[128,7168]{1,0}   or   f32[]   (layout suffix optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+# instruction line:  %name = SHAPE-or-tuple op-name(
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w-]+)(?:\.\d+)?\("
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Bytes of one shape literal such as ``bf16[128,7168]{1,0}``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue  # token dtype like 'token' or opaque
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Byte counts per collective op kind, plus the weighted total."""
+
+    counts: Dict[str, int]
+    bytes_by_op: Dict[str, int]
+    weighted_bytes: float
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{self.counts[k]}x/{self.bytes_by_op[k]/1e6:.1f}MB"
+                 for k in sorted(self.bytes_by_op) if self.counts[k]]
+        return ", ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Scan HLO text and account bytes for every collective instruction."""
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    bytes_by_op = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        # normalise e.g. 'all-gather-start' / 'all-reduce-start' to base op
+        base = None
+        for k in COLLECTIVE_OPS:
+            if op == k or op.startswith(k + "-start"):
+                base = k
+                break
+        if base is None:
+            continue
+        b = _shape_bytes(shape_text)
+        counts[base] += 1
+        bytes_by_op[base] += b
+    weighted = sum(bytes_by_op[k] * COLLECTIVE_OPS[k] for k in COLLECTIVE_OPS)
+    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op,
+                           weighted_bytes=weighted)
+
+
+def count_ops(hlo_text: str, names: Iterable[str]) -> Dict[str, int]:
+    """Count occurrences of specific HLO op kinds (debug / perf forensics)."""
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"\b{re.escape(n)}(?:\.\d+)?\(", hlo_text))
+    return out
+
+
+def fusion_stats(hlo_text: str) -> Dict[str, int]:
+    """Quick structural profile of a compiled module (perf forensics)."""
+    interesting = ["fusion", "dot", "convolution", "transpose", "reshape",
+                   "copy", "dynamic-slice", "dynamic-update-slice", "while",
+                   "custom-call"]
+    return count_ops(hlo_text, interesting)

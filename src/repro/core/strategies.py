@@ -1,0 +1,398 @@
+"""Search strategies: full, random, simulated annealing, PSO (+ extensions).
+
+The four strategies of the paper (section III-B/C/D) with its exact update
+equations, plus a pluggable registry so "evolutionary search, gradient
+methods, stochastic optimisation or dynamic programming can be evaluated as
+part of future work" (paper, end of III-B).  We add one beyond-paper strategy
+(greedy coordinate descent) used by the sharding tuner.
+
+Objective convention: *lower is better* (execution time in seconds), exactly
+like the paper's annealing-energy analogy.  Infeasible / failed measurements
+return ``math.inf`` and are recorded but never become the incumbent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .space import Config, SearchSpace
+
+Objective = Callable[[Config], float]
+
+
+@dataclasses.dataclass
+class Trial:
+    """One evaluated configuration."""
+
+    config: Config
+    time: float                 # seconds (inf = failed/infeasible)
+    index: int                  # evaluation order, 0-based
+
+    @property
+    def ok(self) -> bool:
+        return math.isfinite(self.time)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    strategy: str
+    trials: List[Trial]
+    best: Optional[Trial]
+    evaluations: int
+    #: per-strategy extras (e.g. PSO per-particle traces)
+    extra: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def best_time(self) -> float:
+        return self.best.time if self.best else math.inf
+
+    @property
+    def best_config(self) -> Optional[Config]:
+        return self.best.config if self.best else None
+
+    def progress_trace(self) -> List[float]:
+        """Best-so-far time after each evaluation (paper Fig. 4 traces)."""
+        out, best = [], math.inf
+        for t in self.trials:
+            best = min(best, t.time)
+            out.append(best)
+        return out
+
+
+class _Recorder:
+    """Shared bookkeeping: measurement cache, trial log, incumbent.
+
+    Re-visiting an already-measured configuration does NOT re-measure it
+    (CLTune's compiled-kernel cache) but DOES consume search budget — a
+    stochastic walk that keeps revisiting known points must still
+    terminate.  ``unique_evaluations`` reports how many distinct configs
+    were actually measured.
+    """
+
+    def __init__(self, space: SearchSpace, objective: Objective):
+        self._space = space
+        self._objective = objective
+        self._seen: Dict[Tuple, float] = {}
+        self.trials: List[Trial] = []
+        self.best: Optional[Trial] = None
+
+    def evaluate(self, config: Config) -> float:
+        key = self._space.config_key(config)
+        if key in self._seen:
+            t = self._seen[key]          # cached measurement
+        else:
+            t = float(self._objective(config))
+            self._seen[key] = t
+        trial = Trial(config=dict(config), time=t, index=len(self.trials))
+        self.trials.append(trial)
+        if math.isfinite(t) and (self.best is None or t < self.best.time):
+            self.best = trial
+        return t
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.trials)
+
+    @property
+    def unique_evaluations(self) -> int:
+        return len(self._seen)
+
+
+class Strategy:
+    """Base class; subclasses implement ``run``."""
+
+    name = "base"
+
+    def run(self, space: SearchSpace, objective: Objective,
+            budget: int, seed: int = 0) -> SearchResult:
+        raise NotImplementedError
+
+
+class FullSearch(Strategy):
+    """Exhaustive enumeration of every feasible configuration."""
+
+    name = "full"
+
+    def run(self, space, objective, budget=None, seed=0) -> SearchResult:
+        rec = _Recorder(space, objective)
+        for i, cfg in enumerate(space):
+            if budget is not None and i >= budget:
+                break
+            rec.evaluate(cfg)
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
+
+
+class RandomSearch(Strategy):
+    """Uniform sampling of a configurable fraction of the space."""
+
+    name = "random"
+
+    def run(self, space, objective, budget, seed=0) -> SearchResult:
+        rng = random.Random(seed)
+        rec = _Recorder(space, objective)
+        for cfg in space.sample_unique(rng, budget):
+            rec.evaluate(cfg)
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
+
+
+class SimulatedAnnealing(Strategy):
+    """Paper section III-C, acceptance probability taken verbatim:
+
+        P(t, t', T) = 1                      if t' < t
+                      exp(-(t' - t) / T)     otherwise
+
+    with T the annealing temperature and t, t' the execution times of the
+    current and neighbour configuration.  As in CLTune the walk starts from a
+    random feasible configuration and runs until ``budget`` configurations
+    have been explored.  ``temperature`` is expressed in the objective's
+    units scaled by the first measurement, so T={2,4,6} behaves like the
+    paper's settings regardless of kernel magnitude; ``cooling`` optionally
+    anneals T linearly to ~0 over the run ("probability decreases over time
+    as the temperature decreases").
+    """
+
+    name = "annealing"
+
+    def __init__(self, temperature: float = 4.0, cooling: bool = True,
+                 neighbour_mode: str = "any_value",
+                 restart_on_dead_end: bool = True):
+        self.temperature = float(temperature)
+        self.cooling = cooling
+        self.neighbour_mode = neighbour_mode
+        self.restart_on_dead_end = restart_on_dead_end
+
+    def run(self, space, objective, budget, seed=0) -> SearchResult:
+        rng = random.Random(seed)
+        rec = _Recorder(space, objective)
+        current = space.sample(rng)
+        t_cur = rec.evaluate(current)
+        scale = t_cur if math.isfinite(t_cur) and t_cur > 0 else 1.0
+        accepted_worse = 0
+        while rec.evaluations < budget:
+            nbr = space.random_neighbour(current, rng, mode=self.neighbour_mode)
+            if nbr is None:
+                if not self.restart_on_dead_end:
+                    break
+                current = space.sample(rng)
+                t_cur = rec.evaluate(current)
+                continue
+            t_nbr = rec.evaluate(nbr)
+            # temperature in units of the initial measurement; linear cooling
+            frac_done = rec.evaluations / max(budget, 1)
+            T = self.temperature * (1.0 - frac_done if self.cooling else 1.0)
+            T = max(T, 1e-9)
+            if t_nbr < t_cur:
+                p = 1.0                                     # always accept better
+            elif not math.isfinite(t_nbr):
+                p = 0.0                                     # never move into a wall
+            else:
+                p = math.exp(-((t_nbr - t_cur) / scale) / T)
+            if rng.random() < p:
+                if t_nbr >= t_cur:
+                    accepted_worse += 1
+                current, t_cur = nbr, t_nbr
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations,
+                            extra={"accepted_worse": accepted_worse,
+                                   "temperature": self.temperature})
+
+
+class ParticleSwarm(Strategy):
+    """Paper section III-D: modified *discrete* accelerated PSO.
+
+    Velocity-free, per-dimension d update:
+
+        x[i,d] <- eps_d      with probability alpha   (random value)
+                  p[i,d]     with probability beta    (particle best)
+                  g[d]       with probability gamma   (global best)
+                  x[i,d]     otherwise                (stay)
+
+    with alpha + beta + gamma <= 1.  Paper experiments use alpha=0.4, beta=0,
+    gamma=0.4, swarm sizes S in {3, 6}.
+    """
+
+    name = "pso"
+
+    def __init__(self, swarm_size: int = 3, alpha: float = 0.4,
+                 beta: float = 0.0, gamma: float = 0.4,
+                 max_repair_tries: int = 32):
+        if alpha + beta + gamma > 1.0 + 1e-9:
+            raise ValueError("require alpha + beta + gamma <= 1")
+        self.swarm_size = swarm_size
+        self.alpha, self.beta, self.gamma = alpha, beta, gamma
+        self.max_repair_tries = max_repair_tries
+
+    def _move(self, space: SearchSpace, rng: random.Random,
+              x: Config, p_best: Config, g_best: Config) -> Config:
+        """One per-dimension stochastic move; rejection-repair to feasibility."""
+        params = space.parameters
+        for _ in range(self.max_repair_tries):
+            new: Config = {}
+            for param in params:
+                r = rng.random()
+                if r < self.alpha:
+                    new[param.name] = rng.choice(param.values)      # eps_d
+                elif r < self.alpha + self.beta:
+                    new[param.name] = p_best[param.name]            # local best
+                elif r < self.alpha + self.beta + self.gamma:
+                    new[param.name] = g_best[param.name]            # global best
+                else:
+                    new[param.name] = x[param.name]                 # stay
+            if space.is_feasible(new):
+                return new
+        return space.sample(rng)    # repair failed: rerandomise the particle
+
+    def run(self, space, objective, budget, seed=0) -> SearchResult:
+        rng = random.Random(seed)
+        rec = _Recorder(space, objective)
+        n = self.swarm_size
+        xs = [space.sample(rng) for _ in range(n)]
+        ts = [rec.evaluate(x) for x in xs]
+        p_best = list(xs)
+        p_time = list(ts)
+        g_i = min(range(n), key=lambda i: p_time[i])
+        g_best, g_time = dict(p_best[g_i]), p_time[g_i]
+        particle_traces: List[List[float]] = [[t] for t in ts]
+        while rec.evaluations < budget:
+            for i in range(n):
+                if rec.evaluations >= budget:
+                    break
+                xs[i] = self._move(space, rng, xs[i], p_best[i], g_best)
+                ts[i] = rec.evaluate(xs[i])
+                particle_traces[i].append(ts[i])
+                if ts[i] < p_time[i]:
+                    p_best[i], p_time[i] = dict(xs[i]), ts[i]
+                if ts[i] < g_time:
+                    g_best, g_time = dict(xs[i]), ts[i]
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations,
+                            extra={"particle_traces": particle_traces,
+                                   "swarm_size": n})
+
+
+class GreedyCoordinateDescent(Strategy):
+    """Beyond-paper: cycle through parameters, greedily taking the best value
+    of each while holding the others fixed; restart from a random point when
+    a full cycle yields no improvement.  Cheap and surprisingly strong on the
+    near-separable sharding spaces; included as a pluggable-strategy demo.
+    """
+
+    name = "greedy"
+
+    def run(self, space, objective, budget, seed=0) -> SearchResult:
+        rng = random.Random(seed)
+        rec = _Recorder(space, objective)
+        current = space.sample(rng)
+        t_cur = rec.evaluate(current)
+        while rec.evaluations < budget:
+            improved = False
+            for param in space.parameters:
+                if rec.evaluations >= budget:
+                    break
+                for v in param.values:
+                    if v == current[param.name]:
+                        continue
+                    cand = dict(current)
+                    cand[param.name] = v
+                    if not space.is_feasible(cand):
+                        continue
+                    t = rec.evaluate(cand)
+                    if t < t_cur:
+                        current, t_cur = cand, t
+                        improved = True
+                    if rec.evaluations >= budget:
+                        break
+            if not improved:
+                current = space.sample(rng)      # random restart
+                t_cur = rec.evaluate(current)
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
+
+
+class Evolutionary(Strategy):
+    """Genetic algorithm — the paper's named future-work strategy (§III-B).
+
+    Tournament selection, uniform crossover per dimension, per-dimension
+    mutation to a random value; elitism keeps the incumbent.  Infeasible
+    offspring are repaired by re-sampling.
+    """
+
+    name = "evolutionary"
+
+    def __init__(self, population: int = 8, mutation_rate: float = 0.15,
+                 tournament: int = 3, max_repair_tries: int = 32):
+        self.population = population
+        self.mutation_rate = mutation_rate
+        self.tournament = tournament
+        self.max_repair_tries = max_repair_tries
+
+    def _offspring(self, space: SearchSpace, rng: random.Random,
+                   a: Config, b: Config) -> Config:
+        for _ in range(self.max_repair_tries):
+            child: Config = {}
+            for p in space.parameters:
+                v = a[p.name] if rng.random() < 0.5 else b[p.name]
+                if rng.random() < self.mutation_rate:
+                    v = rng.choice(p.values)
+                child[p.name] = v
+            if space.is_feasible(child):
+                return child
+        return space.sample(rng)
+
+    def run(self, space, objective, budget, seed=0) -> SearchResult:
+        rng = random.Random(seed)
+        rec = _Recorder(space, objective)
+        pop = [space.sample(rng) for _ in range(self.population)]
+        fit = [rec.evaluate(x) for x in pop]
+
+        def tourney() -> Config:
+            idx = min(rng.sample(range(len(pop)),
+                                 min(self.tournament, len(pop))),
+                      key=lambda i: fit[i])
+            return pop[idx]
+
+        while rec.evaluations < budget:
+            elite_i = min(range(len(pop)), key=lambda i: fit[i])
+            new_pop = [pop[elite_i]]
+            new_fit = [fit[elite_i]]
+            while len(new_pop) < self.population \
+                    and rec.evaluations < budget:
+                child = self._offspring(space, rng, tourney(), tourney())
+                new_pop.append(child)
+                new_fit.append(rec.evaluate(child))
+            pop, fit = new_pop, new_fit
+        return SearchResult(self.name, rec.trials, rec.best,
+                            rec.evaluations,
+                            extra={"population": self.population})
+
+
+# ---------------------------------------------------------------------------
+# Registry ("other search methods are easily pluggable into CLTune")
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Strategy]] = {
+    "full": FullSearch,
+    "random": RandomSearch,
+    "annealing": SimulatedAnnealing,
+    "pso": ParticleSwarm,
+    "greedy": GreedyCoordinateDescent,
+    "evolutionary": Evolutionary,
+}
+
+
+def register_strategy(name: str, factory: Callable[..., Strategy]) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"strategy {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def make_strategy(name: str, **kwargs) -> Strategy:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(f"unknown strategy {name!r}; known: {sorted(_REGISTRY)}") from e
+    return factory(**kwargs)
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,196 @@
+"""The Tuner facade — CLTune's user API, adapted to JAX.
+
+The OpenCL original (paper Fig. 1):
+
+    cltune::Tuner tuner(0, 1);
+    tuner.AddKernel("copy.cl", "copy", {2048}, {64});
+    tuner.AddParameter("WPT", {1, 2, 4});
+    tuner.DivGlobalSize({"WPT"});
+    tuner.AddArgumentInput(in_vector);
+    tuner.AddArgumentOutput(out_vector);
+    tuner.Tune();
+
+This port:
+
+    tuner = Tuner(evaluator=WallClockEvaluator())
+    tuner.add_kernel(build=lambda cfg: make_copy(cfg), make_args=...)
+    tuner.add_parameter("WPT", [1, 2, 4])
+    tuner.add_constraint(lambda wpt: 2048 % wpt == 0, ["WPT"])
+    tuner.set_reference(ref_copy)
+    outcome = tuner.tune(strategy="full")
+
+``DivGlobalSize``/``MulLocalSize`` disappear: in Pallas the grid is computed
+from the block shape inside ``build``, so thread-geometry bookkeeping lives
+with the kernel, not the tuner.  Device-limit auto-constraints (paper III-A)
+are imposed from the DeviceProfile when a kernel declares its VMEM-footprint
+function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .cache import TuningCache, default_cache
+from .evaluators import Evaluator, KernelSpec, Measurement, WallClockEvaluator
+from .profiles import DeviceProfile, TPU_V5E
+from .space import Config, Parameter, SearchSpace
+from .strategies import SearchResult, Strategy, make_strategy
+
+log = logging.getLogger("repro.tuner")
+
+
+@dataclasses.dataclass
+class TuningOutcome:
+    """Search result plus measurement metadata and reporting helpers."""
+
+    kernel: str
+    result: SearchResult
+    measurements: Dict[tuple, Measurement]
+    evaluator: str
+    profile: str
+
+    @property
+    def best_config(self) -> Optional[Config]:
+        return self.result.best_config
+
+    @property
+    def best_time(self) -> float:
+        return self.result.best_time
+
+    @property
+    def failed_fraction(self) -> float:
+        n = len(self.result.trials)
+        if not n:
+            return 0.0
+        return sum(1 for t in self.result.trials if not t.ok) / n
+
+    def report(self, top_k: int = 5) -> str:
+        lines = [f"== tuning report: {self.kernel} "
+                 f"(strategy={self.result.strategy}, "
+                 f"evaluator={self.evaluator}, profile={self.profile}) ==",
+                 f"evaluated {self.result.evaluations} configurations, "
+                 f"{self.failed_fraction:.0%} failed/infeasible"]
+        ok = sorted((t for t in self.result.trials if t.ok),
+                    key=lambda t: t.time)
+        for i, t in enumerate(ok[:top_k]):
+            lines.append(f"  #{i + 1}: {t.time * 1e6:9.2f} us  {t.config}")
+        if not ok:
+            lines.append("  (no feasible configuration found)")
+        return "\n".join(lines)
+
+
+class Tuner:
+    """Generic auto-tuner: declare a kernel + parameters, search, report."""
+
+    def __init__(self, evaluator: Optional[Evaluator] = None,
+                 profile: DeviceProfile = TPU_V5E,
+                 cache: Optional[TuningCache] = None):
+        self.evaluator = evaluator or WallClockEvaluator()
+        self.profile = profile
+        self.space = SearchSpace()
+        self._spec: Optional[KernelSpec] = None
+        self._cache = cache
+        self._reference: Optional[Callable] = None
+
+    # -- CLTune-style declaration ---------------------------------------------
+    def add_kernel(self, build: Callable[[Config], Callable],
+                   name: str = "kernel",
+                   make_args: Optional[Callable] = None,
+                   arg_specs: Optional[Callable] = None,
+                   analytical_model: Optional[Callable] = None,
+                   vmem_footprint: Optional[Callable[[Config], int]] = None,
+                   meta: Optional[Dict[str, Any]] = None) -> "Tuner":
+        """Register the (single) kernel under tuning.
+
+        ``vmem_footprint(config) -> bytes`` triggers the automatic
+        device-limit constraint: configurations whose working set exceeds the
+        profile's VMEM are infeasible before any evaluation — the analogue of
+        CLTune auto-constraining on OpenCL local-memory size.
+        """
+        if self._spec is not None:
+            raise ValueError("a kernel is already registered; "
+                             "use one Tuner per kernel")
+        self._spec = KernelSpec(
+            name=name, build=build, make_args=make_args, arg_specs=arg_specs,
+            analytical_model=analytical_model,
+            reference=self._reference, meta=meta or {})
+        self._vmem_footprint = vmem_footprint
+        self._vmem_constraint_added = False
+        return self
+
+    def add_parameter(self, name: str, values: Sequence[Any]) -> "Tuner":
+        self.space.add_parameter(Parameter(name=name, values=tuple(values)))
+        return self
+
+    def add_constraint(self, fn: Callable[..., bool],
+                       names: Sequence[str], label: str = "") -> "Tuner":
+        self.space.add_constraint(fn, names, label=label)
+        return self
+
+    def set_reference(self, reference: Callable) -> "Tuner":
+        self._reference = reference
+        if self._spec is not None:
+            self._spec = dataclasses.replace(self._spec, reference=reference)
+        return self
+
+    # -- device auto-constraints ------------------------------------------------
+    def _install_device_constraints(self) -> None:
+        if self._vmem_footprint is None or self._vmem_constraint_added:
+            return
+        names = self.space.names
+        foot = self._vmem_footprint
+        limit = self.profile.vmem_bytes
+
+        def _fits(*values) -> bool:
+            cfg = dict(zip(names, values))
+            try:
+                return foot(cfg) <= limit
+            except Exception:  # noqa: BLE001 — malformed config = infeasible
+                return False
+
+        self.space.add_constraint(_fits, names, label="device:vmem")
+        self._vmem_constraint_added = True
+
+    # -- search ------------------------------------------------------------------
+    def tune(self, strategy: str | Strategy = "full",
+             budget: Optional[int] = None, seed: int = 0,
+             record_to_cache: bool = False,
+             shape_key: str = "",
+             **strategy_kwargs) -> TuningOutcome:
+        if self._spec is None:
+            raise ValueError("no kernel registered; call add_kernel first")
+        if self.space.num_dimensions == 0:
+            raise ValueError("no parameters registered; call add_parameter")
+        self._install_device_constraints()
+
+        strat = (strategy if isinstance(strategy, Strategy)
+                 else make_strategy(strategy, **strategy_kwargs))
+        measurements: Dict[tuple, Measurement] = {}
+
+        def objective(config: Config) -> float:
+            m = self.evaluator.evaluate(self._spec, config)
+            measurements[self.space.config_key(config)] = m
+            if not m.ok:
+                log.debug("config %s failed: %s", config, m.error)
+            return m.time_s
+
+        if budget is None and strat.name != "full":
+            budget = max(1, self.space.cardinality() // 32)   # paper's 1/32nd
+        result = strat.run(self.space, objective, budget, seed=seed)
+
+        outcome = TuningOutcome(
+            kernel=self._spec.name, result=result, measurements=measurements,
+            evaluator=self.evaluator.name, profile=self.profile.name)
+        if record_to_cache and result.best is not None:
+            cache = self._cache or default_cache()
+            cache.record(self._spec.name, shape_key or "default",
+                         self.profile.name, result.best.config,
+                         result.best.time, result.strategy,
+                         result.evaluations)
+            cache.save()
+        return outcome

@@ -1,0 +1,71 @@
+"""Result verification: CLTune's ``SetReference`` mechanism.
+
+The outputs of each tested kernel configuration are compared against the
+outputs of a reference implementation; a mismatch marks the configuration as
+failed so "no parameter-dependent bugs are present in the kernel"
+(paper section III-A).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# default absolute/relative tolerances per result dtype
+_TOLS = {
+    jnp.float32.dtype: (1e-5, 1e-5),
+    jnp.bfloat16.dtype: (2e-2, 2e-2),
+    jnp.float16.dtype: (2e-3, 2e-3),
+    jnp.float64.dtype: (1e-12, 1e-12),
+}
+
+
+class VerificationError(AssertionError):
+    pass
+
+
+def _leaf_close(a, b, atol: Optional[float], rtol: Optional[float]) -> None:
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.shape != b.shape:
+        raise VerificationError(f"shape mismatch: {a.shape} vs {b.shape}")
+    if a.dtype != b.dtype:
+        # allow dtype promotion differences; compare in f32
+        a = a.astype(np.float32)
+        b = b.astype(np.float32)
+    da, dr = _TOLS.get(jnp.asarray(a).dtype, (1e-5, 1e-5))
+    atol = da if atol is None else atol
+    rtol = dr if rtol is None else rtol
+    if not np.allclose(a, b, atol=atol, rtol=rtol, equal_nan=False):
+        err = np.abs(a.astype(np.float64) - b.astype(np.float64))
+        denom = np.maximum(np.abs(b.astype(np.float64)), 1e-30)
+        raise VerificationError(
+            f"output mismatch: max_abs_err={err.max():.3e} "
+            f"max_rel_err={(err / denom).max():.3e} "
+            f"(atol={atol}, rtol={rtol})")
+
+
+def assert_trees_close(candidate: Any, reference: Any,
+                       atol: Optional[float] = None,
+                       rtol: Optional[float] = None) -> None:
+    """Assert two pytrees of arrays match within tolerance."""
+    ca = jax.tree_util.tree_leaves(candidate)
+    re_ = jax.tree_util.tree_leaves(reference)
+    if len(ca) != len(re_):
+        raise VerificationError(
+            f"pytree leaf count mismatch: {len(ca)} vs {len(re_)}")
+    for a, b in zip(ca, re_):
+        _leaf_close(a, b, atol, rtol)
+
+
+def trees_close(candidate: Any, reference: Any,
+                atol: Optional[float] = None,
+                rtol: Optional[float] = None) -> bool:
+    try:
+        assert_trees_close(candidate, reference, atol=atol, rtol=rtol)
+        return True
+    except VerificationError:
+        return False

@@ -1,0 +1,3 @@
+from .pipeline import EOS, DataConfig, Prefetcher, TokenSource
+
+__all__ = ["EOS", "DataConfig", "Prefetcher", "TokenSource"]

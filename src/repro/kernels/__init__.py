@@ -1,0 +1,13 @@
+"""Pallas TPU kernels — the paper's two case studies + one extension.
+
+  matmul/     GEMM          (paper section VI)
+  conv2d/     2D convolution (paper section V)
+  attention/  flash attention (beyond paper; same tuning methodology)
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + tuned-config lookup) and ref.py (pure-jnp oracle).
+"""
+
+from . import attention, conv2d, matmul
+
+__all__ = ["attention", "conv2d", "matmul"]

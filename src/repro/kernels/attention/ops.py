@@ -1,0 +1,110 @@
+"""Batched/multi-head wrapper + tuner integration for flash attention."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import TPUAnalyticalEvaluator, Tuner, default_cache
+from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.space import Config
+from .flash import (DEFAULT_CONFIG, analytical_time, make_flash_attention,
+                    vmem_footprint)
+from .ref import attention_reference
+
+KERNEL_NAME = "flash_attention"
+
+
+def shape_key(Sq: int, Sk: int, D: int, causal: bool = True) -> str:
+    return f"Sq{Sq}_Sk{Sk}_D{D}_{'c' if causal else 'f'}"
+
+
+def heuristic_config(Sq: int, Sk: int) -> Dict[str, Any]:
+    def pick(d, cands):
+        for c in cands:
+            if d % c == 0:
+                return c
+        return d
+    return {"BLOCK_Q": pick(Sq, (512, 256, 128, 64)),
+            "BLOCK_K": pick(Sk, (1024, 512, 256, 128, 64))}
+
+
+def lookup_config(Sq: int, Sk: int, D: int, causal: bool = True,
+                  profile: DeviceProfile = TPU_V5E) -> Dict[str, Any]:
+    entry = default_cache().get(KERNEL_NAME, shape_key(Sq, Sk, D, causal),
+                                profile.name)
+    return dict(entry.config) if entry else heuristic_config(Sq, Sk)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    config: Optional[Dict[str, Any]] = None,
+                    profile: DeviceProfile = TPU_V5E,
+                    interpret: bool = False):
+    """q: (..., Sq, D), k/v: (..., Sk, D); leading dims vmapped."""
+    *lead, Sq, D = q.shape
+    Sk = k.shape[-2]
+    cfg = config or lookup_config(Sq, Sk, D, causal, profile)
+    fn = make_flash_attention(Sq, Sk, D, cfg, causal=causal,
+                              dtype=q.dtype, interpret=interpret)
+    for _ in lead:
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+def tuning_space():
+    params = {
+        "BLOCK_Q": (64, 128, 256, 512, 1024),
+        "BLOCK_K": (64, 128, 256, 512, 1024, 2048),
+        "PIPELINE_DEPTH": (2, 3),
+    }
+    return params, []
+
+
+def make_tuner(Sq: int, Sk: int, D: int, *, causal: bool = True,
+               evaluator=None, profile: DeviceProfile = TPU_V5E,
+               interpret: bool = True) -> Tuner:
+    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
+
+    def build(cfg: Config):
+        return make_flash_attention(Sq, Sk, D, cfg, causal=causal,
+                                    interpret=interpret)
+
+    def make_args(rng: np.random.Generator):
+        mk = lambda s: jnp.asarray(rng.normal(size=s) * 0.5, jnp.float32)
+        return mk((Sq, D)), mk((Sk, D)), mk((Sk, D))
+
+    def arg_specs():
+        f32 = jnp.float32
+        return (jax.ShapeDtypeStruct((Sq, D), f32),
+                jax.ShapeDtypeStruct((Sk, D), f32),
+                jax.ShapeDtypeStruct((Sk, D), f32))
+
+    tuner = Tuner(evaluator=evaluator, profile=profile)
+    tuner.set_reference(
+        lambda q, k, v: attention_reference(q, k, v, causal=causal))
+    tuner.add_kernel(
+        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
+        analytical_model=lambda cfg, prof: analytical_time(
+            cfg, prof, Sq, Sk, D, causal=causal),
+        vmem_footprint=lambda cfg: vmem_footprint(cfg, D),
+        meta={"Sq": Sq, "Sk": Sk, "D": D})
+    params, constraints = tuning_space()
+    for name, values in params.items():
+        tuner.add_parameter(name, values)
+    tuner.add_constraint(lambda bq: Sq % bq == 0, ("BLOCK_Q",), "Sq % BLOCK_Q")
+    tuner.add_constraint(lambda bk: Sk % bk == 0, ("BLOCK_K",), "Sk % BLOCK_K")
+    return tuner
+
+
+def tune_flash_attention(Sq: int, Sk: int, D: int, *, causal: bool = True,
+                         strategy: str = "annealing", budget: int = 40,
+                         profile: DeviceProfile = TPU_V5E,
+                         record: bool = True, seed: int = 0, **kwargs):
+    tuner = make_tuner(Sq, Sk, D, causal=causal, profile=profile, **kwargs)
+    return tuner.tune(strategy=strategy, budget=budget, seed=seed,
+                      record_to_cache=record,
+                      shape_key=shape_key(Sq, Sk, D, causal))

@@ -1,0 +1,120 @@
+"""jit'd entry point + tuner integration for the conv2d case study."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import TPUAnalyticalEvaluator, Tuner, TuningCache, default_cache
+from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.space import Config
+from .conv2d import (DEFAULT_CONFIG, analytical_time, make_conv2d,
+                     vmem_footprint)
+from .ref import conv2d_reference
+
+KERNEL_NAME = "conv2d"
+
+
+def shape_key(H: int, W: int, Fh: int, Fw: int) -> str:
+    return f"H{H}_W{W}_F{Fh}x{Fw}"
+
+
+def heuristic_config(H: int, W: int, Fh: int, Fw: int) -> Dict[str, Any]:
+    return {"BLOCK_H": min(16, H), "BLOCK_W": min(256, W),
+            "SUB_H": 1, "UNROLL": True, "HALO_MODE": "materialize"}
+
+
+def lookup_config(H: int, W: int, Fh: int, Fw: int,
+                  profile: DeviceProfile = TPU_V5E,
+                  cache: Optional[TuningCache] = None) -> Dict[str, Any]:
+    cache = cache or default_cache()
+    entry = cache.get(KERNEL_NAME, shape_key(H, W, Fh, Fw), profile.name)
+    return dict(entry.config) if entry else heuristic_config(H, W, Fh, Fw)
+
+
+def conv2d(image: jax.Array, filt: jax.Array,
+           config: Optional[Dict[str, Any]] = None, weight: float = 1.0,
+           profile: DeviceProfile = TPU_V5E, interpret: bool = False):
+    H, W = image.shape
+    Fh, Fw = filt.shape
+    cfg = config or lookup_config(H, W, Fh, Fw, profile)
+    return make_conv2d(H, W, Fh, Fw, cfg, weight=weight,
+                       interpret=interpret)(image, filt)
+
+
+# ---------------------------------------------------------------------------
+# tuner integration
+# ---------------------------------------------------------------------------
+
+def tuning_space(extended: bool = False):
+    """Conv parameter space (compare paper Table II: 3424 configurations)."""
+    if extended:
+        params = {
+            "BLOCK_H": (4, 8, 16, 32, 64, 128),
+            "BLOCK_W": (64, 128, 256, 512, 1024),
+            "SUB_H": (1, 2, 4, 8),
+            "UNROLL": (True, False),
+            "HALO_MODE": ("materialize", "xla"),
+            "PAD_W": (0, 1),
+            "PIPELINE_DEPTH": (2, 3, 4),
+        }
+    else:
+        params = {
+            "BLOCK_H": (8, 16, 32),
+            "BLOCK_W": (128, 256),
+            "SUB_H": (1, 2),
+            "UNROLL": (True, False),
+            "HALO_MODE": ("materialize", "xla"),
+        }
+    constraints = [
+        (lambda bh, s: bh % s == 0, ("BLOCK_H", "SUB_H"),
+         "BLOCK_H divisible by SUB_H"),
+    ]
+    return params, constraints
+
+
+def make_tuner(H: int, W: int, Fh: int, Fw: int, *, evaluator=None,
+               profile: DeviceProfile = TPU_V5E, interpret: bool = True,
+               extended_space: bool = True) -> Tuner:
+    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
+
+    def build(cfg: Config):
+        return make_conv2d(H, W, Fh, Fw, cfg, interpret=interpret)
+
+    def make_args(rng: np.random.Generator):
+        img = jnp.asarray(rng.normal(size=(H, W)), jnp.float32)
+        flt = jnp.asarray(rng.normal(size=(Fh, Fw)), jnp.float32)
+        return img, flt
+
+    def arg_specs():
+        return (jax.ShapeDtypeStruct((H, W), jnp.float32),
+                jax.ShapeDtypeStruct((Fh, Fw), jnp.float32))
+
+    tuner = Tuner(evaluator=evaluator, profile=profile)
+    tuner.set_reference(conv2d_reference)
+    tuner.add_kernel(
+        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
+        analytical_model=lambda cfg, prof: analytical_time(
+            cfg, prof, H, W, Fh, Fw),
+        vmem_footprint=lambda cfg: vmem_footprint(cfg, Fh, Fw),
+        meta={"H": H, "W": W, "Fh": Fh, "Fw": Fw})
+    params, constraints = tuning_space(extended=extended_space)
+    for name, values in params.items():
+        tuner.add_parameter(name, values)
+    for fn, names, label in constraints:
+        tuner.add_constraint(fn, names, label)
+    return tuner
+
+
+def tune_conv2d(H: int, W: int, Fh: int, Fw: int,
+                strategy: str = "annealing", budget: int = 107,
+                profile: DeviceProfile = TPU_V5E, record: bool = True,
+                seed: int = 0, **kwargs):
+    """Paper section V-B used budget=107 (1/32 of its 3424-config space)."""
+    tuner = make_tuner(H, W, Fh, Fw, profile=profile, **kwargs)
+    return tuner.tune(strategy=strategy, budget=budget, seed=seed,
+                      record_to_cache=record,
+                      shape_key=shape_key(H, W, Fh, Fw))

@@ -1,0 +1,170 @@
+"""jit'd public entry point for the tuned GEMM.
+
+``matmul(a, b)`` consults the tuned-config database (written by the tuner,
+keyed by shape and device profile — CLTune scenario 3) and falls back to a
+heuristic default.  ``tune_matmul`` runs the paper's search on the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import (KernelSpec, TPUAnalyticalEvaluator, Tuner,
+                     TuningCache, WallClockEvaluator, default_cache)
+from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.space import Config
+from . import ref
+from .matmul import (DEFAULT_CONFIG, analytical_time, make_matmul,
+                     vmem_footprint)
+
+KERNEL_NAME = "gemm"
+
+
+def shape_key(M: int, N: int, K: int, dtype="float32") -> str:
+    return f"M{M}_N{N}_K{K}_{jnp.dtype(dtype).name}"
+
+
+def heuristic_config(M: int, N: int, K: int) -> Dict[str, Any]:
+    """Largest aligned blocks that divide the problem; sensible defaults."""
+    def pick(d, cands):
+        for c in cands:
+            if d % c == 0:
+                return c
+        return d
+    return {
+        "BLOCK_M": pick(M, (512, 256, 128, 64, 32, 16, 8)),
+        "BLOCK_N": pick(N, (512, 256, 128, 64, 32, 16, 8)),
+        "BLOCK_K": pick(K, (512, 256, 128, 64, 32, 16, 8)),
+        "GRID_ORDER": "mn", "INNER_STEPS": 1,
+        "ACC_DTYPE": "float32", "ACC_IN_OUTPUT": False, "TRANS_A": False,
+    }
+
+
+def lookup_config(M: int, N: int, K: int,
+                  profile: DeviceProfile = TPU_V5E,
+                  cache: Optional[TuningCache] = None) -> Dict[str, Any]:
+    cache = cache or default_cache()
+    entry = cache.get(KERNEL_NAME, shape_key(M, N, K), profile.name)
+    if entry is not None:
+        return dict(entry.config)
+    return heuristic_config(M, N, K)
+
+
+def matmul(a: jax.Array, b: jax.Array, config: Optional[Dict[str, Any]] = None,
+           *, alpha: float = 1.0, beta: float = 0.0,
+           c: Optional[jax.Array] = None,
+           profile: DeviceProfile = TPU_V5E, interpret: bool = False):
+    """C = alpha * op(A) @ B (+ beta * C), Pallas-tiled.
+
+    The alpha/beta epilogue runs in XLA (it fuses); the Pallas kernel does
+    the FLOP-heavy product, as in the paper's GEMM.
+    """
+    trans = bool((config or {}).get("TRANS_A", False))
+    M = a.shape[1] if trans else a.shape[0]
+    K = a.shape[0] if trans else a.shape[1]
+    N = b.shape[1]
+    cfg = config or lookup_config(M, N, K, profile)
+    fn = make_matmul(M, N, K, cfg, out_dtype=a.dtype, interpret=interpret)
+    out = fn(a, b)
+    if alpha != 1.0:
+        out = alpha * out
+    if c is not None and beta != 0.0:
+        out = out + beta * c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tuner integration
+# ---------------------------------------------------------------------------
+
+def tuning_space(extended: bool = False):
+    """(values, constraints) for the GEMM space.
+
+    ``extended=True`` is the paper-scale space (>200k configurations,
+    benchmark Fig. 7); the compact space is what tests sweep with real
+    Pallas-interpret execution.
+    """
+    if extended:
+        params = {
+            "BLOCK_M": (32, 64, 128, 256, 512, 1024),
+            "BLOCK_N": (32, 64, 128, 256, 512, 1024),
+            "BLOCK_K": (32, 64, 128, 256, 512, 1024),
+            "GRID_ORDER": ("mn", "nm"),
+            "INNER_STEPS": (1, 2, 4, 8),
+            "ACC_DTYPE": ("float32", "bfloat16"),
+            "ACC_IN_OUTPUT": (False, True),
+            "TRANS_A": (False, True),
+            "PIPELINE_DEPTH": (2, 3, 4),
+            "NBUF_OUT": (1, 2),
+            "PACK": (1, 2, 4),
+        }
+    else:
+        params = {
+            "BLOCK_M": (128, 256, 512),
+            "BLOCK_N": (128, 256, 512),
+            "BLOCK_K": (128, 256, 512),
+            "GRID_ORDER": ("mn", "nm"),
+            "INNER_STEPS": (1, 2),
+            "ACC_DTYPE": ("float32",),
+            "ACC_IN_OUTPUT": (False, True),
+            "TRANS_A": (False,),
+        }
+    constraints = [
+        (lambda bk, s: bk % s == 0, ("BLOCK_K", "INNER_STEPS"),
+         "BLOCK_K divisible by INNER_STEPS"),
+        (lambda acc_out, acc: (not acc_out) or acc == "float32",
+         ("ACC_IN_OUTPUT", "ACC_DTYPE"), "in-place acc requires f32"),
+    ]
+    return params, constraints
+
+
+def make_tuner(M: int, N: int, K: int, *, evaluator=None,
+               profile: DeviceProfile = TPU_V5E, interpret: bool = True,
+               extended_space: bool = False, seed: int = 0) -> Tuner:
+    """A ready-to-run Tuner for this GEMM shape (the paper's case study 2)."""
+    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
+
+    def build(cfg: Config):
+        return make_matmul(M, N, K, cfg, interpret=interpret)
+
+    def make_args(rng: np.random.Generator):
+        a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+        return a, b
+
+    def arg_specs():
+        return (jax.ShapeDtypeStruct((M, K), jnp.float32),
+                jax.ShapeDtypeStruct((K, N), jnp.float32))
+
+    tuner = Tuner(evaluator=evaluator, profile=profile)
+    tuner.set_reference(lambda a, b: ref.gemm_reference(a, b))
+    tuner.add_kernel(
+        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
+        analytical_model=lambda cfg, prof: analytical_time(cfg, prof, M, N, K),
+        vmem_footprint=vmem_footprint,
+        meta={"M": M, "N": N, "K": K})
+    params, constraints = tuning_space(extended=extended_space)
+    for name, values in params.items():
+        tuner.add_parameter(name, values)
+    for fn, names, label in constraints:
+        tuner.add_constraint(fn, names, label)
+    # problem-size divisibility (device-independent feasibility)
+    tuner.add_constraint(lambda bm: M % bm == 0, ("BLOCK_M",), "M % BLOCK_M")
+    tuner.add_constraint(lambda bn: N % bn == 0, ("BLOCK_N",), "N % BLOCK_N")
+    tuner.add_constraint(lambda bk: K % bk == 0, ("BLOCK_K",), "K % BLOCK_K")
+    return tuner
+
+
+def tune_matmul(M: int, N: int, K: int, strategy: str = "annealing",
+                budget: int = 100, profile: DeviceProfile = TPU_V5E,
+                record: bool = True, seed: int = 0, **kwargs):
+    tuner = make_tuner(M, N, K, profile=profile, **kwargs)
+    outcome = tuner.tune(strategy=strategy, budget=budget, seed=seed,
+                         record_to_cache=record,
+                         shape_key=shape_key(M, N, K))
+    return outcome

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, dry-run, training and serving drivers.
+
+Deliberately import-light: ``dryrun.py`` must set XLA_FLAGS before any jax
+backend initialisation, so this package does not import submodules eagerly.
+"""

@@ -1,0 +1,422 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, extract memory/cost/collective analyses, and emit
+# the roofline terms (EXPERIMENTS.md section Dry-run / section Roofline).
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count at backend initialisation).
+# ---------------------------------------------------------------------------
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch, input_specs  # noqa: E402
+from repro.core.hlo import collective_stats, fusion_stats  # noqa: E402
+from repro.core.profiles import TPU_V5E  # noqa: E402
+from repro.dist import partition, sharding  # noqa: E402
+from repro.dist.step import (make_prefill_step, make_serve_step,  # noqa: E402
+                             make_train_step)
+from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
+from repro.models import abstract_cache, abstract_model  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+from repro.models.model import RunConfig  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+REPLICATED = None   # shorthand
+
+# gradient-sharding constraints (EXPERIMENTS.md §Perf B6/C6): opt-in via
+# env var so the recorded baseline sweep stays reproducible.
+SHARD_GRADS_DEFAULT = os.environ.get("REPRO_SHARD_GRADS", "0") == "1"
+
+
+# per-arch attention sharding mode (DESIGN.md §6): 'expanded' when KV < 16
+# but H divides the model axis; 'grouped' + sequence-parallel rule when H
+# does not divide (qwen 40, llava 56, musicgen 24).
+ARCH_ATTN_MODE = {
+    "mistral-large-123b": "expanded",   # H=96, KV=8
+    "qwen2.5-32b": "grouped",           # H=40 indivisible -> seq-parallel
+    "granite-34b": "expanded",          # H=48, KV=1
+    "granite-3-2b": "expanded",         # H=32, KV=8
+    "deepseek-v3-671b": "grouped",      # MLA, H=128 divisible
+    "kimi-k2-1t-a32b": "expanded",      # H=64, KV=8
+    "llava-next-34b": "grouped",        # H=56 indivisible -> seq-parallel
+    "zamba2-7b": "grouped",             # KV=32 divisible
+    "musicgen-medium": "grouped",       # H=24 indivisible -> seq-parallel
+    "mamba2-130m": "grouped",           # attention-free
+}
+
+SEQ_PARALLEL_ARCHS = {"qwen2.5-32b", "llava-next-34b", "musicgen-medium"}
+
+# gradient-accumulation microbatches for training (keeps per-layer residual
+# memory bounded); scaled roughly with d_model * layers.
+ARCH_TRAIN_MICROBATCH = {
+    "mistral-large-123b": 8,
+    "qwen2.5-32b": 4,
+    "granite-34b": 4,
+    "granite-3-2b": 1,
+    "deepseek-v3-671b": 8,
+    "kimi-k2-1t-a32b": 8,
+    "llava-next-34b": 4,
+    "zamba2-7b": 2,
+    "musicgen-medium": 1,
+    "mamba2-130m": 1,
+}
+
+
+def default_rules_override(arch_id: str) -> Dict[str, Any]:
+    if arch_id in SEQ_PARALLEL_ARCHS:
+        return {"seq_attn": "model"}
+    return {}
+
+
+def default_run_config(arch_id: str, shape_name: str) -> RunConfig:
+    """Baseline execution knobs per cell (the hillclimb's starting point)."""
+    shape = SHAPES[shape_name]
+    remat = "full" if shape.kind == "train" else "none"
+    attn_chunk = 2048 if (shape.kind != "decode"
+                          and shape.seq_len >= 32_768) else 0
+    ce_chunk = 512 if shape.kind == "train" else 0
+    micro = ARCH_TRAIN_MICROBATCH.get(arch_id, 1) \
+        if shape.kind == "train" else 1
+    accum = "bfloat16" if arch_id in ("deepseek-v3-671b",
+                                      "kimi-k2-1t-a32b") else "float32"
+    return RunConfig(remat=remat, attn_chunk=attn_chunk, ce_chunk=ce_chunk,
+                     attn_mode=ARCH_ATTN_MODE.get(arch_id, "grouped"),
+                     microbatch=micro, accum_dtype=accum)
+
+
+def default_opt_config(arch_id: str) -> adamw.OptimConfig:
+    # giant MoEs: bf16 moments (compressed optimizer) so params+opt approach
+    # pod HBM; everything else keeps f32 moments.
+    if arch_id in ("deepseek-v3-671b", "kimi-k2-1t-a32b"):
+        return adamw.OptimConfig(moment_dtype="bfloat16")
+    return adamw.OptimConfig()
+
+
+def _mem_analysis(compiled) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return out
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes",
+                  "serialized_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = float(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    n_active = cfg.num_active_params()
+    if kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch      # one decode step
+
+
+# ---------------------------------------------------------------------------
+# cost measurement.  XLA's cost_analysis (and the HLO text) count a while-
+# loop body ONCE, so a scanned layer stack under-reports flops/bytes/
+# collectives by ~L.  We therefore measure reduced-depth UNROLLED variants
+# (depths L1 < L2) and extrapolate linearly: cost(L) = c1 + (L - L1) * per
+# with per = (c2 - c1) / (L2 - L1).  The production (scanned) artifact is
+# still compiled for memory analysis and compile-time stats.
+# ---------------------------------------------------------------------------
+
+def _build_lowered(cfg, shape, run: RunConfig, mesh, rules,
+                   opt_cfg: adamw.OptimConfig, shard_grads: bool = None):
+    """Lower one step function for (cfg, shape) under mesh+rules."""
+    if shard_grads is None:
+        shard_grads = SHARD_GRADS_DEFAULT
+    with sharding.use_sharding(mesh, rules):
+        params = abstract_model(cfg)
+        p_shard = partition.model_shardings(cfg, mesh, rules)
+        b_shard = partition.batch_shardings(cfg, shape, mesh, rules)
+        batch = input_specs(cfg, shape)
+        if shape.kind == "train":
+            opt = adamw.abstract_state(opt_cfg, params)
+            o_shard = partition.opt_shardings(p_shard, mesh)
+            fn = make_train_step(
+                cfg, run, opt_cfg,
+                grad_shardings=p_shard if shard_grads else None)
+            jitted = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, REPLICATED),
+                             donate_argnums=(0, 1))
+            return jitted.lower(params, opt, batch)
+        if shape.kind == "prefill":
+            fn = make_prefill_step(cfg, run)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            return jitted.lower(params, batch)
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_shard = partition.cache_shardings(
+            cfg, shape.global_batch, shape.seq_len, mesh, rules)
+        fn = make_serve_step(cfg, run)
+        jitted = jax.jit(fn,
+                         in_shardings=(p_shard, c_shard, b_shard["inputs"],
+                                       REPLICATED),
+                         out_shardings=(REPLICATED, c_shard),
+                         donate_argnums=(1,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return jitted.lower(params, cache, batch["inputs"], pos)
+
+
+def _module_costs(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_weighted": coll.weighted_bytes,
+        "coll_total": float(coll.total_bytes),
+        "coll_by_op": dict(coll.bytes_by_op),
+        "coll_counts": dict(coll.counts),
+    }
+
+
+def _measurement_depths(cfg) -> tuple:
+    """(L1, L2, extrapolation-count) reduced depths for cost measurement."""
+    if cfg.family == "hybrid":
+        unit = cfg.hybrid_mamba_per_attn + 1
+        n_super = cfg.num_layers // unit
+        return unit, 2 * unit, None     # per-super-block delta
+    if cfg.is_moe:
+        d = cfg.moe_first_dense
+        return d + 1, d + 2, None
+    return 1, 2, None
+
+
+def _extrapolate(c1: Dict[str, Any], c2: Dict[str, Any],
+                 n_units: float) -> Dict[str, Any]:
+    """cost = c1 + (n_units - 1) * (c2 - c1), element-wise."""
+    out: Dict[str, Any] = {}
+    for k in ("flops", "bytes", "coll_weighted", "coll_total"):
+        out[k] = c1[k] + (n_units - 1) * max(0.0, c2[k] - c1[k])
+    out["coll_by_op"] = {
+        op: c1["coll_by_op"][op] + (n_units - 1)
+        * max(0.0, c2["coll_by_op"][op] - c1["coll_by_op"][op])
+        for op in c1["coll_by_op"]}
+    out["coll_counts"] = {
+        op: int(c1["coll_counts"][op] + (n_units - 1)
+                * max(0, c2["coll_counts"][op] - c1["coll_counts"][op]))
+        for op in c1["coll_counts"]}
+    return out
+
+
+def measure_costs(cfg, shape, run: RunConfig, mesh, rules,
+                  opt_cfg: adamw.OptimConfig) -> Dict[str, Any]:
+    """Per-chip flops/bytes/collective costs, scan-corrected."""
+    run_m = dataclasses.replace(run, scan_blocks=False, ce_chunk=0,
+                                attn_chunk=0, microbatch=1)
+    L1, L2, _ = _measurement_depths(cfg)
+    cfg1 = dataclasses.replace(cfg, num_layers=L1)
+    cfg2 = dataclasses.replace(cfg, num_layers=L2)
+    c1 = _module_costs(_build_lowered(cfg1, shape, run_m, mesh, rules,
+                                      opt_cfg).compile())
+    c2 = _module_costs(_build_lowered(cfg2, shape, run_m, mesh, rules,
+                                      opt_cfg).compile())
+    if cfg.family == "hybrid":
+        unit = cfg.hybrid_mamba_per_attn + 1
+        n_units = cfg.num_layers / unit     # tail mambas ~ fractional unit
+    elif cfg.is_moe:
+        n_units = cfg.num_layers - cfg.moe_first_dense
+    else:
+        n_units = cfg.num_layers
+    out = _extrapolate(c1, c2, n_units)
+    out["measured_depths"] = [L1, L2]
+    out["n_units"] = n_units
+    return out
+
+
+def analyze_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                 run: Optional[RunConfig] = None,
+                 rules_override: Optional[Dict[str, Any]] = None,
+                 opt_cfg: Optional[adamw.OptimConfig] = None,
+                 profile=TPU_V5E, keep_text: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the dry-run/roofline record."""
+    spec = get_arch(arch_id)
+    cfg = spec.full
+    shape = SHAPES[shape_name]
+    run = run or default_run_config(arch_id, shape_name)
+    opt_cfg = opt_cfg or default_opt_config(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    if rules_override is None:
+        rules_override = default_rules_override(arch_id)
+    record: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips, "multi_pod": multi_pod,
+        "run_config": dataclasses.asdict(run),
+        "rules_override": rules_override or {},
+    }
+    rules = dict(sharding.DEFAULT_RULES, **(rules_override or {}))
+
+    # 1) production artifact: the scanned, deployable program.  Memory
+    #    analysis, compile stats and HLO structure come from here.
+    t0 = time.perf_counter()
+    lowered = _build_lowered(cfg, shape, run, mesh, rules, opt_cfg)
+    record["lower_s"] = round(time.perf_counter() - t0, 2)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.perf_counter() - t1, 2)
+    text = compiled.as_text()
+    record["hlo_ops"] = fusion_stats(text)
+    record["memory"] = _mem_analysis(compiled)
+    record["scanned_module_costs"] = _module_costs(compiled)
+    if keep_text:
+        record["hlo_text"] = text
+
+    # 2) scan-corrected per-chip costs: reduced-depth unrolled variants,
+    #    linearly extrapolated (see measure_costs).
+    t2 = time.perf_counter()
+    costs = measure_costs(cfg, shape, run, mesh, rules, opt_cfg)
+    record["measure_s"] = round(time.perf_counter() - t2, 2)
+
+    p = profile
+    flops, bytes_ = costs["flops"], costs["bytes"]
+    compute_t = flops / p.peak_flops
+    memory_t = bytes_ / p.hbm_bw
+    coll_t = costs["coll_weighted"] / (p.ici_links * p.ici_bw)
+    dominant = max((("compute", compute_t), ("memory", memory_t),
+                    ("collective", coll_t)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape, shape.kind)
+    step_t = max(compute_t, memory_t) + coll_t
+    record.update({
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": costs["coll_total"],
+        "collective_weighted_bytes": costs["coll_weighted"],
+        "collective_by_op": costs["coll_by_op"],
+        "collective_counts": costs["coll_counts"],
+        "measured_depths": costs["measured_depths"],
+        "roofline": {
+            "compute_t": compute_t,
+            "memory_t": memory_t,
+            "collective_t": coll_t,
+            "dominant": dominant,
+            "step_t": step_t,
+            # fraction of the step the chip spends at its compute roofline
+            "roofline_fraction": (mf / chips / p.peak_flops) / step_t
+            if step_t else 0.0,
+        },
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / chips,
+        "useful_flops_ratio": (mf / chips) / flops if flops else 0.0,
+    })
+    return record
+
+
+def run_cells(cells, multi_pod: bool, out_dir: str,
+              run_overrides: Optional[Dict[str, Any]] = None,
+              rules_override: Optional[Dict[str, Any]] = None,
+              keep_going: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch_id, shape_name in cells:
+        tag = f"{arch_id}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        print(f"=== dry-run {tag} ===", flush=True)
+        try:
+            run = default_run_config(arch_id, shape_name)
+            if run_overrides:
+                run = dataclasses.replace(run, **run_overrides)
+            rec = analyze_cell(arch_id, shape_name, multi_pod=multi_pod,
+                               run=run, rules_override=rules_override)
+            rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001
+            if not keep_going:
+                raise
+            rec = {"arch": arch_id, "shape": shape_name,
+                   "multi_pod": multi_pod, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"    FAILED: {rec['error']}", flush=True)
+        path = os.path.join(out_dir, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        jax.clear_caches()        # bound compile-cache growth over the sweep
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"    lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                  f"flops/chip={rec['flops_per_chip']:.3e} "
+                  f"dominant={r['dominant']} step={r['step_t']*1e3:.2f}ms "
+                  f"mem={rec['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB",
+                  flush=True)
+        results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[None] + list(SHAPES), nargs="?")
+    ap.add_argument("--all", action="store_true",
+                    help="run every non-skipped (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "full", "dots"], nargs="?")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, "scatter", "gather", "onehot"], nargs="?")
+    ap.add_argument("--no-scan-blocks", action="store_true",
+                    help="unroll the layer stack instead of lax.scan")
+    ap.add_argument("--attn-mode", default=None,
+                    choices=[None, "grouped", "expanded"], nargs="?")
+    ap.add_argument("--accum-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"], nargs="?")
+    ap.add_argument("--rules", default=None,
+                    help="JSON logical->mesh-axis rule overrides")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+    if args.all:
+        cells = [(a, s) for a, s, _ in all_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    overrides = {}
+    for k in ("remat", "microbatch", "attn_chunk", "moe_impl", "attn_mode",
+              "accum_dtype"):
+        v = getattr(args, k.replace("-", "_"))
+        if v is not None:
+            overrides[k] = v
+    if args.no_scan_blocks:
+        overrides["scan_blocks"] = False
+    rules_override = json.loads(args.rules) if args.rules else None
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        run_cells(cells, mp, args.out, run_overrides=overrides or None,
+                  rules_override=rules_override,
+                  keep_going=not args.fail_fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction (brief-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state, so tests that want 1 CPU device can import it safely.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (unit tests, examples)."""
+    n = len(jax.devices())
+    model_axis = max(1, min(model_axis, n))
+    data_axis = n // model_axis
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,17 @@
+"""Model zoo: unified decoder covering all ten assigned architectures."""
+
+from .config import SHAPES, ModelConfig, ShapeConfig
+from .model import (DEFAULT_RUN, RunConfig, abstract_cache, abstract_model,
+                    cache_defs, cross_entropy, decode_step, forward,
+                    init_cache, init_model, loss_fn, model_defs)
+from .params import (ParamDef, abstract_params, count_params, init_params,
+                     param_axes, param_bytes, stack_defs, tree_paths)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "ShapeConfig",
+    "DEFAULT_RUN", "RunConfig", "abstract_cache", "abstract_model",
+    "cache_defs", "cross_entropy", "decode_step", "forward", "init_cache",
+    "init_model", "loss_fn", "model_defs",
+    "ParamDef", "abstract_params", "count_params", "init_params",
+    "param_axes", "param_bytes", "stack_defs", "tree_paths",
+]

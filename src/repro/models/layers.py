@@ -1,0 +1,255 @@
+"""Core decoder layers: RMSNorm, rotary embedding, GQA attention, SwiGLU MLP.
+
+All layers are functional: ``*_defs(cfg)`` returns the ParamDef tree,
+``apply_*`` consumes the matching params.  Activation sharding constraints
+are applied through ``repro.dist.sharding.shard`` (no-op outside a mesh
+context, so the same code runs in CPU smoke tests and 512-chip dry-runs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .params import ParamDef
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def norm_defs(d: int) -> ParamDef:
+    return ParamDef((d,), (None,), init="ones", dtype="float32")
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, ..., head_dim); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    # broadcast across any head dims between seq and head_dim
+    for _ in range(x.ndim - angles.ndim):
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (MHA when KV == H, MQA when KV == 1)
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    defs = {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def _grouped_attention(q, k, v, *, q_positions, k_positions,
+                       k_valid_len=None) -> jax.Array:
+    """q: (B,S,KV,G,hd); k/v: (B,T,KV,hd) -> (B,S,KV,G,hd).
+
+    Causal mask via explicit positions; ``k_valid_len`` additionally masks
+    cache slots beyond the current decode position.  (An einsum
+    preferred_element_type variant that avoids f32 K/V copies measured
+    cost-neutral and the CPU backend cannot execute BF16xBF16=F32 dots —
+    EXPERIMENTS.md §Perf A1, reverted.)
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = q_positions[:, None, None, :, None] >= \
+        k_positions[:, None, None, None, :]
+    if k_valid_len is not None:
+        mask = jnp.logical_and(
+            mask, (jnp.arange(k.shape[1])[None, :] <
+                   k_valid_len[:, None])[:, None, None, None, :])
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out
+
+
+def _chunked_attention(q, k, v, *, q_positions, k_positions,
+                       chunk: int) -> jax.Array:
+    """Online-softmax scan over KV chunks — the XLA analogue of the Pallas
+    flash kernel (kernels/attention).  Peak memory is O(S * chunk) instead
+    of O(S * T); the Pallas kernel swaps in on real TPUs via RunConfig.
+    """
+    B, T, KV, hd = k.shape
+    nc = T // chunk
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32)
+
+    kc = k.reshape(B, nc, chunk, KV, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nc, chunk, KV, hd).swapaxes(0, 1)
+    pc = k_positions.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    S = q.shape[1]
+    m0 = jnp.full((B, KV, q.shape[3], S, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    acc0 = jnp.zeros((B, S, KV, q.shape[3], hd), jnp.float32)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, kp = inputs
+        s = jnp.einsum("bskgh,btkh->bkgst", qf,
+                       kb.astype(jnp.float32)) * scale
+        mask = q_positions[:, None, None, :, None] >= kp[:, None, None, None]
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p, vb.astype(jnp.float32))
+        acc_new = acc * alpha[..., 0].transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = lax.scan(step, (m0, l0, acc0), (kc, vc, pc))
+    denom = jnp.maximum(l[..., 0], 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return acc / denom
+
+
+def apply_attention(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                    positions: jax.Array,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    attn_chunk: int = 0,
+                    mode: str = "grouped"
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d).  With ``cache`` (decode): writes k/v at ``cache_pos``
+    and attends over the whole cache buffer; returns the updated cache.
+
+    Sharding modes for the full-sequence path (DESIGN.md §6):
+      * 'grouped'  — GQA einsum over (KV, G) heads; shards the KV dim when
+        it divides the model axis (zamba2: KV=32).
+      * 'expanded' — repeat K/V to all H heads and shard H (mistral 96,
+        kimi 64, granites: KV < 16 but H % 16 == 0).
+    Archs whose H does not divide the model axis (qwen 40, llava 56,
+    musicgen 24) keep 'grouped' and map the 'seq_attn' logical axis to
+    'model' instead — Megatron-style sequence-parallel attention.
+    Decode always uses the grouped path with the cache sharded along time.
+    """
+    B, S, _ = x.shape
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G = H // KV
+    hd = cfg.resolved_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None and mode == "expanded" and G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        KV_eff, G_eff = H, 1
+    else:
+        KV_eff, G_eff = KV, G
+    q = q.reshape(B, S, KV_eff, G_eff, hd)
+    q = shard(q, "batch", "seq_attn", "kv_heads", None, None)
+    if cache is None:
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+
+    if cache is None:
+        if attn_chunk and k.shape[1] % attn_chunk == 0 \
+                and k.shape[1] > attn_chunk:
+            out = _chunked_attention(q, k, v, q_positions=positions,
+                                     k_positions=positions,
+                                     chunk=attn_chunk)
+        else:
+            out = _grouped_attention(q, k, v, q_positions=positions,
+                                     k_positions=positions)
+        new_cache = None
+    else:
+        # decode: S == 1; insert k/v at cache_pos, attend over the buffer
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=1)
+        T = ck.shape[1]
+        k_positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                       (B, T))
+        valid = jnp.full((B,), cache_pos + 1, dtype=jnp.int32)
+        out = _grouped_attention(q, ck, cv, q_positions=positions,
+                                 k_positions=k_positions, k_valid_len=valid)
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(B, S, H, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def attention_cache_defs(cfg: ModelConfig, batch: int, max_len: int
+                         ) -> Dict[str, ParamDef]:
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, max_len, KV, hd)
+    axes = ("batch", "seq_kv", "kv_heads", "head_dim")
+    return {"k": ParamDef(shape, axes, init="zeros"),
+            "v": ParamDef(shape, axes, init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None,
+             variant: Optional[str] = None) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    variant = variant or cfg.mlp_variant
+    defs = {
+        "wi": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+    if variant == "swiglu":
+        defs["wg"] = ParamDef((d, f), ("embed", "mlp"))
+    return defs
+
+
+def apply_mlp(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "wg" in p:           # SwiGLU
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * up
+    else:                   # classic 2-matrix GELU MLP
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are projected through low-rank latents; only the
+compressed KV latent (kv_lora_rank) plus a shared rotary key (qk_rope_dim)
+is cached at decode time.  Decode uses the absorbed-weight trick: scores are
+computed in latent space, so per-step cost is O(S * (kv_lora + rope)) per
+head instead of re-expanding the full K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import apply_rope, rms_norm, norm_defs
+from .params import ParamDef
+
+_NEG = -1e30
+
+
+def mla_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    vdim, kvr, qr = cfg.v_head_dim, cfg.kv_lora_rank, cfg.q_lora_rank
+    defs: Dict[str, Any] = {
+        # KV path: down-projection to latent + shared rotary key
+        "wkv_a": ParamDef((d, kvr + rope_d), ("embed", "kv_lora")),
+        "kv_norm": norm_defs(kvr),
+        "wk_b": ParamDef((kvr, H, nope), ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamDef((kvr, H, vdim), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamDef((H, vdim, d), ("heads", "head_dim", "embed")),
+    }
+    if qr:
+        defs["wq_a"] = ParamDef((d, qr), ("embed", "q_lora"))
+        defs["q_norm"] = norm_defs(qr)
+        defs["wq_b"] = ParamDef((qr, H, nope + rope_d),
+                                ("q_lora", "heads", "head_dim"))
+    else:
+        defs["wq"] = ParamDef((d, H, nope + rope_d),
+                              ("embed", "heads", "head_dim"))
+    return defs
+
+
+def _project_q(cfg: ModelConfig, p, x, positions):
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]),
+                      p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = shard(q, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(cfg: ModelConfig, p, x, positions):
+    kvr = cfg.kv_lora_rank
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)   # shared head
+    return c_kv, k_rope
+
+
+def apply_mla(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array,
+              positions: jax.Array,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c_kv, k_rope = _project_latent(cfg, p, x, positions)
+
+    if cache is None:
+        # train/prefill: expand K and V per head
+        k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["wk_b"])
+        v = jnp.einsum("btr,rhk->bthk", c_kv, p["wv_b"])
+        s = (jnp.einsum("bshk,bthk->bhst", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+             + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                          k_rope.astype(jnp.float32))) * scale
+        mask = positions[:, None, :, None] >= positions[:, None, None, :]
+        s = jnp.where(mask, s, _NEG)
+        probs = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", probs, v.astype(jnp.float32))
+        new_cache = None
+    else:
+        # decode: absorbed-weight attention over the latent cache
+        cc = lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv,
+                                             cache_pos, axis=1)
+        cr = lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope,
+                                             cache_pos, axis=1)
+        T = cc.shape[1]
+        # absorb wk_b into q: q_lat (B, S, H, kvr)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+        s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        cc.astype(jnp.float32))
+             + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                          cr.astype(jnp.float32))) * scale
+        valid = jnp.arange(T)[None, None, None, :] <= \
+            positions[:, None, :, None]
+        s = jnp.where(valid, s, _NEG)
+        probs = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, cc.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat.astype(x.dtype), p["wv_b"])
+        new_cache = {"c_kv": cc, "k_rope": cr}
+
+    out = out.astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, max_len: int
+                   ) -> Dict[str, ParamDef]:
+    return {
+        "c_kv": ParamDef((batch, max_len, cfg.kv_lora_rank),
+                         ("batch", "seq_kv", None), init="zeros"),
+        "k_rope": ParamDef((batch, max_len, cfg.qk_rope_dim),
+                           ("batch", "seq_kv", None), init="zeros"),
+    }

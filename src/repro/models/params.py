@@ -1,0 +1,131 @@
+"""Parameter definitions: one tree, three views (init / specs / shapes).
+
+Each model builds a pytree of :class:`ParamDef` — the single source of truth
+for parameter shapes, initialisers and *logical sharding axes*.  From it we
+derive:
+
+  * ``init_params``   — concrete arrays (smoke tests, real training),
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run lowering, no allocation),
+  * ``param_specs``   — PartitionSpecs via the active sharding rules.
+
+Logical axis vocabulary (mapped to mesh axes by ``repro.dist.sharding``):
+  layers, embed, vocab, heads, kv_heads, head_dim, mlp, experts, expert_mlp,
+  q_lora, kv_lora, ssm_inner, ssm_state, ssm_heads, conv_dim, none
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axes, len == ndim
+    init: str = "fan_in"                      # fan_in | normal | zeros | ones
+    scale: float = 1.0
+    dtype: Optional[str] = None               # override model param dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _fan_in(defn: "ParamDef") -> int:
+    # all dims except the last are inputs for projection matrices; stacked
+    # layer dims (axis == "layers") do not contribute to fan-in
+    dims = [d for d, a in zip(defn.shape[:-1], defn.axes[:-1])
+            if a != "layers"]
+    if not dims:
+        return max(1, defn.shape[0] if defn.shape else 1)
+    return int(np.prod(dims))
+
+
+def stack_defs(tree: Any, n: int) -> Any:
+    """Prepend a stacked 'layers' dimension to every ParamDef in a tree."""
+    if _is_def(tree):
+        return dataclasses.replace(tree, shape=(n,) + tree.shape,
+                                   axes=("layers",) + tree.axes)
+    return {k: stack_defs(v, n) for k, v in tree.items()}
+
+
+def init_one(defn: ParamDef, key: jax.Array, dtype: str) -> jax.Array:
+    dt = jnp.dtype(defn.dtype or dtype)
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dt)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dt)
+    if defn.init == "normal":
+        return (defn.scale * jax.random.normal(key, defn.shape,
+                                               jnp.float32)).astype(dt)
+    if defn.init == "fan_in":
+        std = defn.scale / np.sqrt(_fan_in(defn))
+        return (std * jax.random.normal(key, defn.shape,
+                                        jnp.float32)).astype(dt)
+    raise ValueError(f"unknown init {defn.init!r}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_paths(defs: Any, prefix: str = "") -> Dict[str, ParamDef]:
+    """Flatten a ParamDef tree into {'a/b/c': def} (stable order)."""
+    out: Dict[str, ParamDef] = {}
+    if _is_def(defs):
+        out[prefix or "param"] = defs
+        return out
+    if isinstance(defs, dict):
+        for k in sorted(defs):
+            out.update(tree_paths(defs[k], f"{prefix}/{k}" if prefix else k))
+        return out
+    raise TypeError(f"unexpected node {type(defs)} at {prefix!r}")
+
+
+def init_params(defs: Any, key: jax.Array, dtype: str) -> Any:
+    """Materialise the full parameter tree (deterministic per path)."""
+    flat = tree_paths(defs)
+    out_flat = {}
+    for i, (path, d) in enumerate(flat.items()):
+        out_flat[path] = init_one(d, jax.random.fold_in(key, i), dtype)
+    return _unflatten(out_flat)
+
+
+def abstract_params(defs: Any, dtype: str) -> Any:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    flat = tree_paths(defs)
+    out = {p: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or dtype))
+           for p, d in flat.items()}
+    return _unflatten(out)
+
+
+def param_axes(defs: Any) -> Any:
+    """Tree of logical-axis tuples, mirroring the param tree."""
+    flat = tree_paths(defs)
+    return _unflatten({p: d.axes for p, d in flat.items()})
+
+
+def count_params(defs: Any) -> int:
+    return sum(int(np.prod(d.shape)) for d in tree_paths(defs).values())
+
+
+def param_bytes(defs: Any, dtype: str) -> int:
+    flat = tree_paths(defs)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype or dtype).itemsize
+               for d in flat.values())
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root

@@ -1,0 +1,196 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD: within chunks of length Q the recurrence is computed as a
+masked quadratic form (the "attention dual"); across chunks a linear scan
+carries the (H, P, N) state.  Decode is the pure recurrence (O(1) state).
+
+Activations keep the (heads H, head-channels P) axes separate end-to-end so
+the P axis shards cleanly over the tensor-parallel mesh axis (P = 64 always
+divides 16) — flattening to d_inner and re-splitting would force GSPMD
+reshards (DESIGN.md §6).  Single B/C group (G=1): both assigned SSM archs
+use one group; the group dimension is elided.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .params import ParamDef
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    N, W = cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "wz": ParamDef((d, H, P), ("embed", "ssm_heads", "ssm_pdim")),
+        "wx": ParamDef((d, H, P), ("embed", "ssm_heads", "ssm_pdim")),
+        "wB": ParamDef((d, N), ("embed", "ssm_state")),
+        "wC": ParamDef((d, N), ("embed", "ssm_state")),
+        "wdt": ParamDef((d, H), ("embed", "ssm_heads")),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "D": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "conv_x": ParamDef((W, H, P), (None, "ssm_heads", "ssm_pdim"),
+                           init="normal", scale=0.5),
+        "conv_B": ParamDef((W, N), (None, "ssm_state"),
+                           init="normal", scale=0.5),
+        "conv_C": ParamDef((W, N), (None, "ssm_state"),
+                           init="normal", scale=0.5),
+        "norm": ParamDef((H, P), ("ssm_heads", "ssm_pdim"), init="ones",
+                         dtype="float32"),
+        "wo": ParamDef((H, P, d), ("ssm_heads", "ssm_pdim", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, L, ...) ; w: (W, ...) broadcastable — causal depthwise conv."""
+    W = w.shape[0]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (W - 1, 0)
+    xp = jnp.pad(x, pad)
+    out = jnp.zeros_like(x)
+    L = x.shape[1]
+    for i in range(W):                     # W is 4: unrolled shifts
+        out = out + w[i] * lax.dynamic_slice_in_dim(xp, i, L, axis=1)
+    return out
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    """Mamba2's gated RMSNorm over the (H, P) channels."""
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=(-2, -1), keepdims=True)
+    return g * lax.rsqrt(var + eps) * scale
+
+
+def _project(cfg: ModelConfig, p, x):
+    """x: (B, L, d) -> z, xin, B, C, dt (pre-conv, pre-activation)."""
+    z = jnp.einsum("bld,dhp->blhp", x, p["wz"])
+    xin = jnp.einsum("bld,dhp->blhp", x, p["wx"])
+    Bm = jnp.einsum("bld,dn->bln", x, p["wB"])
+    Cm = jnp.einsum("bld,dn->bln", x, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xin, Bm, Cm, dt
+
+
+def ssd_chunked(xin, Bm, Cm, dt, A, D, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xin: (B, L, H, P) f32; Bm/Cm: (B, L, N) f32; dt: (B, L, H) f32;
+    A: (H,) f32 negative; returns y: (B, L, H, P) and final state
+    (B, H, P, N).
+    """
+    Bsz, L, H, P = xin.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} % chunk {Q}"
+    Cn = L // Q
+
+    r = lambda t, tail: t.reshape((Bsz, Cn, Q) + tail)
+    xc, bc, cc, dtc = (r(xin, (H, P)), r(Bm, (N,)), r(Cm, (N,)),
+                       r(dt, (H,)))
+
+    dA = dtc * A                                        # (B,Cn,Q,H), negative
+    la = jnp.cumsum(dA, axis=2)                         # within-chunk log decay
+
+    # intra-chunk (attention dual): scores masked by inter-position decay
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)      # (B,Cn,Q,Q)
+    dmat = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,Cn,Q,Q,H) q vs k
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(dmat), 0.0)
+    m = scores[..., None] * decay                       # (B,Cn,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", m, dtc, xc)
+
+    # chunk summaries: state contribution of each chunk
+    decay_end = jnp.exp(la[:, :, -1:, :] - la)          # (B,Cn,Q,H)
+    S = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", decay_end * dtc, bc, xc)
+
+    # inter-chunk linear scan
+    chunk_decay = jnp.exp(la[:, :, -1, :])              # (B,Cn,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), xin.dtype)
+
+    def step(h, inputs):
+        cd, s = inputs                                  # (B,H), (B,H,P,N)
+        h_new = cd[:, :, None, None] * h + s
+        return h_new, h                                 # emit state BEFORE chunk
+
+    hT, h_prev = lax.scan(step,
+                          h0,
+                          (chunk_decay.swapaxes(0, 1), S.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                      # (B,Cn,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(la), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P) + D[:, None] * xin
+    return y, hT
+
+
+def apply_mamba(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, L, d).  With ``state`` (decode, L == 1): pure recurrence."""
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    D = p["D"].astype(jnp.float32)
+    z, xin, Bm, Cm, dt = _project(cfg, p, x)
+
+    if state is None:
+        xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]))
+        Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+        Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+        xin = shard(xin, "batch", "seq", "ssm_heads", "ssm_pdim")
+        y, _ = ssd_chunked(xin.astype(jnp.float32), Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), dt, A, D, cfg.ssm_chunk)
+        new_state = None
+    else:
+        # decode: roll conv windows, single-step recurrence
+        W = cfg.ssm_conv_width
+
+        def roll(buf, new):                              # (B,W,...) <- (B,1,...)
+            return jnp.concatenate([buf[:, 1:], new], axis=1)
+
+        cx = roll(state["conv_x"], xin)
+        cB = roll(state["conv_B"], Bm)
+        cC = roll(state["conv_C"], Cm)
+        conv = lambda buf, w: jnp.einsum("bw...,w...->b...", buf, w)
+        xt = jax.nn.silu(conv(cx, p["conv_x"]))          # (B,H,P)
+        bt = jax.nn.silu(conv(cB, p["conv_B"]))          # (B,N)
+        ct = jax.nn.silu(conv(cC, p["conv_C"]))          # (B,N)
+        dtt = dt[:, 0]                                   # (B,H)
+        dA = jnp.exp(dtt * A)                            # (B,H)
+        h = state["h"]                                   # (B,H,P,N)
+        h = dA[:, :, None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt.astype(jnp.float32))
+        yt = jnp.einsum("bn,bhpn->bhp", ct, h) + D[:, None] * xt
+        y = yt[:, None]                                  # (B,1,H,P)
+        new_state = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "h": h}
+
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("blhp,hpd->bld", y, p["wo"])
+    return shard(out, "batch", "seq", "embed"), new_state
+
+
+def mamba_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    N, W = cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "h": ParamDef((batch, H, P, N),
+                      ("batch", "ssm_heads", "ssm_pdim", "ssm_state"),
+                      init="zeros", dtype="float32"),
+        "conv_x": ParamDef((batch, W, H, P),
+                           ("batch", None, "ssm_heads", "ssm_pdim"),
+                           init="zeros"),
+        "conv_B": ParamDef((batch, W, N), ("batch", None, "ssm_state"),
+                           init="zeros"),
+        "conv_C": ParamDef((batch, W, N), ("batch", None, "ssm_state"),
+                           init="zeros"),
+    }

@@ -1,0 +1,5 @@
+from .adamw import (OptimConfig, OptState, abstract_state, global_norm, init,
+                    schedule_lr, update)
+
+__all__ = ["OptimConfig", "OptState", "abstract_state", "global_norm",
+           "init", "schedule_lr", "update"]

@@ -1,0 +1,69 @@
+"""Elastic scaling: rebuild the mesh when the healthy-device set changes.
+
+The checkpoint format stores global (unsharded) arrays, so a job restored
+on a different device count just needs (1) a new mesh over the surviving
+devices, (2) re-derived shardings, (3) device_put — all of which
+``CheckpointManager.restore(shardings=...)`` performs.  This module decides
+the new mesh shape and validates that the run configuration still divides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticDecision:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped: int
+    note: str
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              prefer_pods: bool = True) -> ElasticDecision:
+    """Choose a (pod, data, model) factorisation for ``n_devices``.
+
+    Keeps the model axis fixed (changing TP degree would change parameter
+    sharding layout and kernel tuning); absorbs device loss into the data
+    axis, dropping stragglers to the largest usable multiple.
+    """
+    if n_devices < model_parallel:
+        # degraded mode: shrink model axis to the largest power-of-2 fit
+        mp = 1 << (n_devices.bit_length() - 1)
+        return ElasticDecision((1, mp), ("data", "model"),
+                               n_devices - mp,
+                               f"degraded: model axis {mp}")
+    data = n_devices // model_parallel
+    used = data * model_parallel
+    dropped = n_devices - used
+    if prefer_pods and data % 2 == 0 and data >= 32:
+        return ElasticDecision((2, data // 2, model_parallel),
+                               ("pod", "data", "model"), dropped,
+                               "multi-pod layout")
+    return ElasticDecision((data, model_parallel), ("data", "model"),
+                           dropped, "single-pod layout")
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None,
+                      model_parallel: int = 16):
+    devices = list(devices if devices is not None else jax.devices())
+    decision = plan_mesh(len(devices), model_parallel=model_parallel)
+    used = 1
+    for s in decision.mesh_shape:
+        used *= s
+    import numpy as np
+    arr = np.array(devices[:used]).reshape(decision.mesh_shape)
+    return jax.sharding.Mesh(arr, decision.axis_names), decision
+
+
+def validate_batch(global_batch: int, mesh) -> bool:
+    """Global batch must divide the batch-sharding axes."""
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return global_batch % n == 0

@@ -1,0 +1,104 @@
+"""Batched serving engine: continuous batched greedy decoding.
+
+A deliberately compact production shape: fixed-size slot pool, each slot
+holds one request; finished slots are refilled from the queue (continuous
+batching).  The decode step itself is the shared ``dist.step.make_serve_step``
+— the same function the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.step import make_serve_step
+from ..models.config import ModelConfig
+from ..models.model import RunConfig, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    #: filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, run: RunConfig = RunConfig()):
+        if cfg.input_mode != "tokens":
+            raise ValueError("ServeEngine drives token models")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, slots, max_len)
+        self._step = jax.jit(make_serve_step(cfg, run, greedy=True))
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._slot_pos = np.zeros(slots, np.int32)   # next write position
+        self._queue: List[Request] = []
+        self._pos = 0                                 # global decode position
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Decode until all submitted requests finish."""
+        finished: List[Request] = []
+        steps = 0
+        while (any(self._slot_req) or self._queue) and steps < max_steps:
+            self._fill_slots()
+            tokens = self._current_tokens()
+            next_tok, self.cache = self._step(self.params, self.cache,
+                                              tokens, self._pos)
+            self._pos += 1
+            steps += 1
+            self._absorb(np.asarray(next_tok), finished)
+        return finished
+
+    # -- internals ---------------------------------------------------------------
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self._slot_req[i] is None and self._queue:
+                req = self._queue.pop(0)
+                self._slot_req[i] = req
+                # feed the prompt token-by-token starting at the global pos
+                req._prompt_cursor = 0        # type: ignore[attr-defined]
+
+    def _current_tokens(self) -> jax.Array:
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            cur = req._prompt_cursor          # type: ignore[attr-defined]
+            if cur < len(req.prompt):
+                toks[i, 0] = req.prompt[cur]
+            elif req.output:
+                toks[i, 0] = req.output[-1]
+        return jnp.asarray(toks)
+
+    def _absorb(self, next_tok: np.ndarray, finished: List[Request]):
+        for i, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            cur = req._prompt_cursor          # type: ignore[attr-defined]
+            if cur < len(req.prompt) - 1:
+                req._prompt_cursor = cur + 1  # still prefilling (teacher mode)
+                continue
+            req._prompt_cursor = cur + 1
+            tok = int(next_tok[i])
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                finished.append(req)
+                self._slot_req[i] = None

@@ -1,0 +1,11 @@
+"""Tuning integration: kernel autotune DB + distributed-config tuner."""
+
+from ..kernels.attention.ops import tune_flash_attention
+from ..kernels.conv2d.ops import tune_conv2d
+from ..kernels.matmul.ops import tune_matmul
+from .sharding_autotune import (CellObjective, build_space,
+                                config_to_run_rules, tune_cell)
+
+__all__ = ["tune_flash_attention", "tune_conv2d", "tune_matmul",
+           "CellObjective", "build_space", "config_to_run_rules",
+           "tune_cell"]

@@ -1,0 +1,190 @@
+"""Distributed-configuration auto-tuning — the paper's technique, lifted to
+the 512-chip problem (DESIGN.md §3).
+
+A point in the space is (sharding rules x execution knobs): remat policy,
+microbatch, CE/attention chunking, attention sharding mode, FSDP extent,
+MoE dispatch implementation, KV-cache layout.  The objective is the
+roofline step time of the scan-corrected dry-run costs (launch/dryrun
+measure_costs) — a compile-time measurement, no hardware needed — exactly
+the role wall-clock timing plays in CLTune.  Search strategies are the
+paper's own (random / annealing / PSO / greedy) via repro.core.
+
+Used by EXPERIMENTS.md §Perf for the three hillclimbed cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core import SearchSpace, Parameter, make_strategy
+from ..core.profiles import DeviceProfile, TPU_V5E
+from ..models.config import SHAPES
+from ..models.model import RunConfig
+
+GiB = 1024 ** 3
+
+
+def build_space(arch_id: str, shape_name: str,
+                heads_divisible: bool, is_moe: bool = False) -> SearchSpace:
+    """The distributed-config search space for one cell."""
+    shape = SHAPES[shape_name]
+    sp = SearchSpace()
+    if shape.kind == "train":
+        sp.add_parameter(name="REMAT", values=("none", "dots", "full"))
+        sp.add_parameter(name="MICROBATCH", values=(1, 2, 4, 8, 16))
+        sp.add_parameter(name="CE_CHUNK", values=(0, 512, 2048))
+        sp.add_parameter(name="ACCUM_DTYPE",
+                         values=("float32", "bfloat16"))
+        sp.add_constraint(lambda m: shape.global_batch % m == 0,
+                          ("MICROBATCH",), "microbatch divides batch")
+    if shape.kind != "decode":
+        chunks = (0, 1024, 2048, 8192) if shape.seq_len >= 32_768 \
+            else (0, 1024)
+        sp.add_parameter(name="ATTN_CHUNK", values=chunks)
+        sp.add_parameter(name="ATTN_MODE", values=("grouped", "expanded"))
+        sp.add_parameter(name="SEQ_ATTN", values=(None, "model"))
+        if not heads_divisible:
+            # expanded mode needs H % model == 0
+            sp.add_constraint(lambda m: m != "expanded", ("ATTN_MODE",),
+                              "H indivisible: no expanded mode")
+    sp.add_parameter(name="FSDP", values=("none", "data", "pod_data"))
+    if shape.kind == "decode":
+        # time-dim cache layout: model / data+model / replicated
+        sp.add_parameter(name="SEQ_KV",
+                         values=("model", ("data", "model"), None))
+    if is_moe:
+        sp.add_parameter(name="MOE_IMPL", values=("scatter", "gather"))
+    return sp
+
+
+def config_to_run_rules(config: Dict[str, Any], base_run: RunConfig
+                        ) -> Tuple[RunConfig, Dict[str, Any]]:
+    """Translate a search-space point into (RunConfig, rules overrides)."""
+    kw: Dict[str, Any] = {}
+    if "REMAT" in config:
+        kw["remat"] = config["REMAT"]
+    if "MICROBATCH" in config:
+        kw["microbatch"] = config["MICROBATCH"]
+    if "CE_CHUNK" in config:
+        kw["ce_chunk"] = config["CE_CHUNK"]
+    if "ACCUM_DTYPE" in config:
+        kw["accum_dtype"] = config["ACCUM_DTYPE"]
+    if "ATTN_CHUNK" in config:
+        kw["attn_chunk"] = config["ATTN_CHUNK"]
+    if "ATTN_MODE" in config:
+        kw["attn_mode"] = config["ATTN_MODE"]
+    if "MOE_IMPL" in config:
+        kw["moe_impl"] = config["MOE_IMPL"]
+    run = dataclasses.replace(base_run, **kw)
+
+    rules: Dict[str, Any] = {}
+    if "SEQ_ATTN" in config:
+        rules["seq_attn"] = config["SEQ_ATTN"]
+    if "SEQ_KV" in config:
+        rules["seq_kv"] = config["SEQ_KV"]
+    fsdp = config.get("FSDP", "pod_data")
+    rules["embed"] = {"none": None, "data": ("data",),
+                      "pod_data": ("pod", "data")}[fsdp]
+    return run, rules
+
+
+@dataclasses.dataclass
+class CellObjective:
+    """Roofline step time of one (arch, shape, mesh) cell as an objective.
+
+    Each evaluation lowers+compiles reduced-depth variants (launch/dryrun
+    measure_costs) — tens of seconds, not hardware-hours.  HBM feasibility
+    enters as a soft penalty on the *production* artifact's memory when
+    ``check_memory`` is set (slower; used for final candidates).
+    """
+
+    arch_id: str
+    shape_name: str
+    multi_pod: bool = False
+    profile: DeviceProfile = TPU_V5E
+    check_memory: bool = False
+    hbm_limit: float = 16 * GiB
+    log: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    def __call__(self, config: Dict[str, Any]) -> float:
+        # imported lazily: dryrun sets XLA_FLAGS at import time, which is
+        # exactly what we want for tuning runs (512 virtual devices).
+        from ..launch import dryrun
+
+        base = dryrun.default_run_config(self.arch_id, self.shape_name)
+        run, rules = config_to_run_rules(config, base)
+        rules = dict(dryrun.default_rules_override(self.arch_id), **rules)
+        t0 = time.perf_counter()
+        try:
+            if self.check_memory:
+                rec = dryrun.analyze_cell(
+                    self.arch_id, self.shape_name, multi_pod=self.multi_pod,
+                    run=run, rules_override=rules)
+                step_t = rec["roofline"]["step_t"]
+                mem = rec["memory"].get("total_bytes_per_device", 0.0)
+                over = max(0.0, mem - self.hbm_limit) / self.hbm_limit
+                score = step_t * (1.0 + 2.0 * over)
+                detail = {"step_t": step_t, "mem_gib": mem / GiB,
+                          "roofline": rec["roofline"]}
+            else:
+                import jax
+                from repro.dist import sharding as sh
+                from repro.launch.mesh import make_production_mesh
+                mesh = make_production_mesh(multi_pod=self.multi_pod)
+                full_rules = dict(sh.DEFAULT_RULES, **rules)
+                spec = __import__("repro.configs", fromlist=["get_arch"]) \
+                    .get_arch(self.arch_id)
+                costs = dryrun.measure_costs(
+                    spec.full, SHAPES[self.shape_name], run, mesh,
+                    full_rules, dryrun.default_opt_config(self.arch_id))
+                p = self.profile
+                compute_t = costs["flops"] / p.peak_flops
+                memory_t = costs["bytes"] / p.hbm_bw
+                coll_t = costs["coll_weighted"] / (p.ici_links * p.ici_bw)
+                step_t = max(compute_t, memory_t) + coll_t
+                score = step_t
+                detail = {"step_t": step_t, "compute_t": compute_t,
+                          "memory_t": memory_t, "collective_t": coll_t}
+                jax.clear_caches()
+        except Exception as e:  # noqa: BLE001 — infeasible configuration
+            self.log.append({"config": dict(config), "score": None,
+                             "error": str(e)[:300]})
+            return math.inf
+        self.log.append({"config": dict(config), "score": score,
+                         "eval_s": round(time.perf_counter() - t0, 1),
+                         **detail})
+        return score
+
+
+def tune_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+              strategy: str = "greedy", budget: int = 16, seed: int = 0,
+              out_path: Optional[str] = None,
+              heads_divisible: Optional[bool] = None):
+    """Run the paper's search over one cell's distributed-config space."""
+    from ..configs import get_arch
+    cfg = get_arch(arch_id).full
+    if heads_divisible is None:
+        heads_divisible = bool(cfg.num_heads) and cfg.num_heads % 16 == 0
+    space = build_space(arch_id, shape_name, heads_divisible,
+                        is_moe=cfg.is_moe)
+    objective = CellObjective(arch_id, shape_name, multi_pod=multi_pod)
+    strat = make_strategy(strategy)
+    result = strat.run(space, objective, budget=budget, seed=seed)
+    summary = {
+        "arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
+        "strategy": strategy, "budget": budget,
+        "best_config": result.best_config,
+        "best_step_t": result.best_time,
+        "evaluations": result.evaluations,
+        "log": objective.log,
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+    return summary

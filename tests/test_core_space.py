@@ -1,0 +1,106 @@
+"""SearchSpace: constraints, neighbourhoods, sampling (+ properties)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Parameter, SearchSpace
+
+
+def small_space():
+    sp = SearchSpace()
+    sp.add_parameter(name="A", values=(1, 2, 4, 8))
+    sp.add_parameter(name="B", values=(16, 32, 64))
+    sp.add_parameter(name="C", values=("x", "y"))
+    sp.add_constraint(lambda a, b: a * b <= 256, ["A", "B"], "prod")
+    return sp
+
+
+def test_cardinality_and_size():
+    sp = small_space()
+    assert sp.cardinality() == 4 * 3 * 2
+    # infeasible: A*B > 256 -> (8,64) only -> 2 configs removed
+    assert sp.size() == 24 - 2
+
+
+def test_duplicate_parameter_rejected():
+    sp = SearchSpace()
+    sp.add_parameter(name="A", values=(1,))
+    with pytest.raises(ValueError):
+        sp.add_parameter(name="A", values=(2,))
+
+
+def test_unknown_constraint_param_rejected():
+    sp = SearchSpace()
+    sp.add_parameter(name="A", values=(1,))
+    with pytest.raises(KeyError):
+        sp.add_constraint(lambda z: True, ["Z"])
+
+
+def test_enumeration_feasible_only():
+    sp = small_space()
+    for cfg in sp:
+        assert cfg["A"] * cfg["B"] <= 256
+
+
+def test_violated_labels():
+    sp = small_space()
+    assert sp.violated({"A": 8, "B": 64, "C": "x"}) == ["prod"]
+
+
+def test_neighbours_differ_in_one_param():
+    sp = small_space()
+    cfg = {"A": 2, "B": 32, "C": "x"}
+    for nbr in sp.neighbours(cfg):
+        diff = [k for k in cfg if cfg[k] != nbr[k]]
+        assert len(diff) == 1
+        assert sp.is_feasible(nbr)
+
+
+def test_adjacent_neighbours_are_one_step():
+    sp = small_space()
+    cfg = {"A": 2, "B": 32, "C": "x"}
+    for nbr in sp.neighbours(cfg, mode="adjacent"):
+        for p in sp.parameters:
+            di = abs(p.index_of(cfg[p.name]) - p.index_of(nbr[p.name]))
+            assert di <= 1
+
+
+# ---------------------------------------------------------------------------
+# property-based tests
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_sample_always_feasible(seed):
+    sp = small_space()
+    cfg = sp.sample(random.Random(seed))
+    assert sp.is_feasible(cfg)
+
+
+@given(seed=st.integers(0, 10_000), count=st.integers(1, 15))
+@settings(max_examples=20, deadline=None)
+def test_sample_unique_no_duplicates(seed, count):
+    sp = small_space()
+    out = sp.sample_unique(random.Random(seed), count)
+    keys = [sp.config_key(c) for c in out]
+    assert len(set(keys)) == len(keys)
+    assert all(sp.is_feasible(c) for c in out)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_index_roundtrip(seed):
+    sp = small_space()
+    cfg = sp.sample(random.Random(seed))
+    assert sp.from_indices(sp.to_indices(cfg)) == cfg
+
+
+@given(values=st.lists(st.integers(-100, 100), min_size=1, max_size=8,
+                       unique=True))
+@settings(max_examples=25, deadline=None)
+def test_parameter_index_of(values):
+    p = Parameter("p", tuple(values))
+    for i, v in enumerate(values):
+        assert p.index_of(v) == i

@@ -1,0 +1,130 @@
+"""Tuner facade: verification, device constraints, cache, evaluators."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelEvaluator, Measurement, Parameter,
+                        TPUAnalyticalEvaluator, Tuner, TuningCache,
+                        WallClockEvaluator, TPU_V5E, TPU_V3)
+from repro.core.evaluators import KernelSpec
+
+N = 1024
+
+
+def _copy_builder(cfg):
+    wpt = cfg["WPT"]
+
+    def copy(x):
+        return x.reshape(N // wpt, wpt).reshape(N)
+    return copy
+
+
+def _buggy_builder(cfg):
+    """WPT=4 silently drops data — verification must catch it."""
+    wpt = cfg["WPT"]
+
+    def copy(x):
+        if wpt == 4:
+            return jnp.concatenate([x[: N // 2], jnp.zeros(N // 2, x.dtype)])
+        return x
+    return copy
+
+
+def _make_args(rng):
+    return (jnp.asarray(rng.normal(size=N), jnp.float32),)
+
+
+def test_wallclock_tuner_end_to_end():
+    t = Tuner(evaluator=WallClockEvaluator(repeats=2))
+    t.set_reference(lambda x: x)
+    t.add_kernel(_copy_builder, name="copy", make_args=_make_args)
+    t.add_parameter("WPT", [1, 2, 4])
+    out = t.tune(strategy="full")
+    assert out.best_config is not None
+    assert out.failed_fraction == 0.0
+    assert "copy" in out.report()
+
+
+def test_verification_rejects_buggy_config():
+    t = Tuner(evaluator=WallClockEvaluator(repeats=1))
+    t.set_reference(lambda x: x)
+    t.add_kernel(_buggy_builder, name="buggy", make_args=_make_args)
+    t.add_parameter("WPT", [1, 2, 4])
+    out = t.tune(strategy="full")
+    assert out.best_config["WPT"] != 4
+    key = out.result.trials
+    bad = [tr for tr in key if tr.config["WPT"] == 4]
+    assert bad and not bad[0].ok
+
+
+def test_device_vmem_constraint_auto_imposed():
+    t = Tuner(evaluator=WallClockEvaluator(repeats=1), profile=TPU_V3)
+
+    def foot(cfg):
+        return cfg["TILE"] * 1024 * 1024          # 1 MiB per TILE unit
+
+    t.add_kernel(_copy_builder, name="c", make_args=_make_args,
+                 vmem_footprint=foot)
+    t.add_parameter("WPT", [1])
+    t.add_parameter("TILE", [1, 8, 64])            # 64 MiB > v3's 16 MiB
+    out = t.tune(strategy="full")
+    tiles = {tr.config["TILE"] for tr in out.result.trials}
+    assert 64 not in tiles                         # filtered pre-evaluation
+
+
+def test_analytical_evaluator_deterministic_noise():
+    spec = KernelSpec(name="k", build=lambda c: (lambda: None),
+                      analytical_model=lambda c, p: 1e-3 * c["x"])
+    ev = TPUAnalyticalEvaluator(noise_sigma=0.05, seed=3)
+    m1 = ev.evaluate(spec, {"x": 2})
+    m2 = ev.evaluate(spec, {"x": 2})
+    m3 = ev.evaluate(spec, {"x": 3})
+    assert m1.time_s == m2.time_s
+    assert m1.time_s != m3.time_s
+
+
+def test_analytical_evaluator_infeasible():
+    spec = KernelSpec(name="k", build=lambda c: (lambda: None),
+                      analytical_model=lambda c, p: math.inf)
+    m = TPUAnalyticalEvaluator().evaluate(spec, {})
+    assert not m.ok and m.time_s == math.inf
+
+
+def test_cost_model_evaluator_roofline_terms():
+    def build(cfg):
+        def f(a, b):
+            return a @ b
+        return f
+
+    spec = KernelSpec(
+        name="mm", build=build,
+        arg_specs=lambda: (jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                           jax.ShapeDtypeStruct((256, 256), jnp.float32)))
+    m = CostModelEvaluator(profile=TPU_V5E).evaluate(spec, {})
+    assert m.ok
+    assert m.detail["flops"] >= 2 * 256 ** 3 * 0.9
+    assert m.detail["compute_t"] > 0
+
+
+def test_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = TuningCache(path)
+    assert c.get("k", "s", "p") is None
+    c.record("k", "s", "p", {"BM": 128}, 1e-3, "full", 10)
+    c.save()
+    c2 = TuningCache(path).load()
+    e = c2.get("k", "s", "p")
+    assert e.config == {"BM": 128} and e.time_s == 1e-3
+
+
+def test_cache_only_if_better(tmp_path):
+    c = TuningCache(str(tmp_path / "c.json"))
+    assert c.record("k", "s", "p", {"a": 1}, 2.0, "full", 1)
+    assert not c.record("k", "s", "p", {"a": 2}, 3.0, "full", 1)
+    assert c.record("k", "s", "p", {"a": 3}, 1.0, "full", 1)
+    assert c.get("k", "s", "p").config == {"a": 3}

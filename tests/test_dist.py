@@ -1,0 +1,158 @@
+"""Distribution: sharding specs, mesh building, multi-device step (subprocess).
+
+Multi-device tests must set XLA_FLAGS before jax initialises, so they run
+in subprocesses.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_spec_for_divisibility_and_dedup():
+    out = run_sub("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.sharding import spec_for, DEFAULT_RULES
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = dict(DEFAULT_RULES)
+        # heads=8 divisible by model=4 -> sharded
+        s = spec_for((16, 8, 32), ("embed", "heads", None), rules, mesh)
+        assert s == P("data", "model"), s
+        # heads=6 NOT divisible by 4 -> dropped
+        s = spec_for((16, 6, 32), ("embed", "heads", None), rules, mesh)
+        assert s == P("data"), s
+        # duplicate mesh axis: batch claims data first, embed drops it
+        s = spec_for((8, 16, 32), ("batch", "seq", "embed"), rules, mesh)
+        assert s == P("data"), s
+        # multi-axis mapping filtered to existing mesh axes
+        s = spec_for((8,), ("batch",), rules, mesh)
+        assert s == P("data"), s
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    """Real multi-device execution on 8 CPU devices: loss equals 1-device."""
+    out = run_sub("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.dist import sharding, partition
+        from repro.dist.step import make_train_step
+        from repro.models import init_model
+        from repro.models.config import ShapeConfig
+        from repro.models.model import RunConfig
+        from repro.optim import adamw
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        run = RunConfig()
+        opt_cfg = adamw.OptimConfig(lr=1e-3)
+        rng = np.random.default_rng(0)
+        B, S = 4, 32
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(opt_cfg, params)
+        step = make_train_step(cfg, run, opt_cfg)
+
+        # single device reference
+        _, _, m_ref = jax.jit(step)(params, opt, batch)
+        ref = float(m_ref["loss"])
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with sharding.use_sharding(mesh):
+            p_sh = partition.model_shardings(cfg, mesh)
+            shape = ShapeConfig("t", S, B, "train")
+            b_sh = partition.batch_shardings(cfg, shape, mesh)
+            o_sh = partition.opt_shardings(p_sh, mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None))
+            p2, o2, m = jitted(params, opt, batch)
+            dist = float(m["loss"])
+        assert abs(ref - dist) / abs(ref) < 2e-3, (ref, dist)
+        print("OK", ref, dist)
+    """)
+    assert "OK" in out
+
+
+def test_production_mesh_shapes():
+    out = run_sub("""
+        from repro.launch.mesh import make_production_mesh, mesh_chips
+        m = make_production_mesh()
+        assert m.devices.shape == (16, 16), m.devices.shape
+        assert m.axis_names == ("data", "model")
+        mm = make_production_mesh(multi_pod=True)
+        assert mm.devices.shape == (2, 16, 16)
+        assert mm.axis_names == ("pod", "data", "model")
+        assert mesh_chips(mm) == 512
+        print("OK")
+    """, devices=512)
+    assert "OK" in out
+
+
+def test_elastic_restore_across_meshes():
+    """Checkpoint on a (4,2) mesh, restore onto (2,2) — elastic re-shard."""
+    out = run_sub("""
+        import jax, numpy as np, jax.numpy as jnp, tempfile
+        from repro.ckpt import CheckpointManager
+        from repro.dist import sharding, partition
+        from repro.configs import get_config
+        from repro.models import init_model
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d)
+
+        mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+        with sharding.use_sharding(mesh1):
+            sh1 = partition.model_shardings(cfg, mesh1)
+            placed = jax.tree_util.tree_map(jax.device_put, params, sh1)
+            mgr.save(1, placed)
+
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+        with sharding.use_sharding(mesh2):
+            sh2 = partition.model_shardings(cfg, mesh2)
+            out = mgr.restore(template=params, shardings=sh2)
+        a = jax.tree_util.tree_leaves(params)[0]
+        b = jax.tree_util.tree_leaves(out["tree"])[0]
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_cell_end_to_end():
+    """Full dry-run machinery on the smallest cell (512 virtual devices)."""
+    out = run_sub("""
+        import json
+        from repro.launch.dryrun import analyze_cell
+        rec = analyze_cell("mamba2-130m", "decode_32k")
+        assert rec["chips"] == 256
+        r = rec["roofline"]
+        assert r["step_t"] > 0 and r["dominant"] in ("compute", "memory",
+                                                     "collective")
+        assert rec["memory"]["total_bytes_per_device"] > 0
+        print("OK", json.dumps(r))
+    """, devices=512, timeout=900)
+    assert "OK" in out

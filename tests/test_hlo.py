@@ -1,0 +1,56 @@
+"""Collective-bytes HLO parsing."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hlo import collective_stats, fusion_stats, _shape_bytes
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = bf16[128,512]{1,0} parameter(0)
+  %ag = bf16[128,2048]{1,0} all-gather(%p), dimensions={1}
+  %ar = f32[256,256]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,256]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[32,32]{1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %agst = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-gather-start(%q), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,512]{1,0}") == 128 * 512 * 2
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("(f32[8,8], f32[8,8])") == 2 * 8 * 8 * 4
+
+
+def test_collective_stats_counts_and_bytes():
+    s = collective_stats(HLO)
+    assert s.counts["all-gather"] == 2          # incl. all-gather-start
+    assert s.counts["all-reduce"] == 1
+    assert s.counts["reduce-scatter"] == 1
+    assert s.counts["all-to-all"] == 1
+    assert s.counts["collective-permute"] == 1
+    assert s.bytes_by_op["all-gather"] == 128 * 2048 * 2 + 2 * 8 * 8 * 4
+    assert s.bytes_by_op["all-reduce"] == 256 * 256 * 4
+    # weighted: all-reduce counts 2x
+    assert s.weighted_bytes == (s.total_bytes + s.bytes_by_op["all-reduce"])
+
+
+def test_no_false_positives_on_dot():
+    s = collective_stats("%dot = f32[16,16]{1,0} dot(%a, %b)")
+    assert s.total_bytes == 0
+
+
+def test_real_module_roundtrip():
+    """Parse the text of an actually-compiled jax module."""
+    def f(x):
+        return (x @ x.T).sum()
+    text = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile().as_text()
+    s = collective_stats(text)          # single device: no collectives
+    assert s.total_bytes == 0
+    ops = fusion_stats(text)
+    assert isinstance(ops, dict)

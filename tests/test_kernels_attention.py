@@ -1,0 +1,71 @@
+"""Pallas flash attention vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention import (attention_reference, flash_attention,
+                                     make_flash_attention)
+
+RNG = np.random.default_rng(2)
+
+
+def _qkv(sq, sk, d):
+    mk = lambda s: jnp.asarray(RNG.normal(size=s) * 0.5, jnp.float32)
+    return mk((sq, d)), mk((sk, d)), mk((sk, d))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("cfg", [
+    {"BLOCK_Q": 128, "BLOCK_K": 128},
+    {"BLOCK_Q": 64, "BLOCK_K": 256},
+])
+def test_flash_matches_oracle(causal, cfg):
+    q, k, v = _qkv(256, 256, 64)
+    out = make_flash_attention(256, 256, 64, cfg, causal=causal,
+                               interpret=True)(q, k, v)
+    ref = attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_cache_alignment():
+    """Sq < Sk: query block ends align with KV end (decode prefill)."""
+    q, k, v = _qkv(128, 512, 64)
+    out = make_flash_attention(128, 512, 64, {"BLOCK_Q": 64, "BLOCK_K": 128},
+                               causal=True, interpret=True)(q, k, v)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_batched_multihead_wrapper():
+    q = jnp.asarray(RNG.normal(size=(2, 4, 128, 64)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 4, 128, 64)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 4, 128, 64)) * 0.5, jnp.float32)
+    out = flash_attention(q, k, v, causal=True,
+                          config={"BLOCK_Q": 64, "BLOCK_K": 64},
+                          interpret=True)
+    ref = jax.vmap(jax.vmap(
+        lambda q, k, v: attention_reference(q, k, v, causal=True)))(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(bq=st.sampled_from([64, 128]), bk=st.sampled_from([64, 128, 256]),
+       d=st.sampled_from([64, 128]))
+@settings(max_examples=8, deadline=None)
+def test_property_block_sweep(bq, bk, d):
+    q, k, v = _qkv(256, 256, d)
+    out = make_flash_attention(256, 256, d, {"BLOCK_Q": bq, "BLOCK_K": bk},
+                               causal=True, interpret=True)(q, k, v)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_invalid_blocks_rejected():
+    with pytest.raises(ValueError):
+        make_flash_attention(256, 256, 64, {"BLOCK_Q": 100, "BLOCK_K": 128})

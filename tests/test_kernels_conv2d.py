@@ -1,0 +1,102 @@
+"""Pallas conv2d vs oracle + analytic-model structure."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TPU_V5E
+from repro.kernels.conv2d import (analytical_time, conv2d_reference,
+                                  conv_flops, make_conv2d, tuning_space)
+
+RNG = np.random.default_rng(1)
+
+
+def _data(H, W, Fh, Fw):
+    img = jnp.asarray(RNG.normal(size=(H, W)), jnp.float32)
+    flt = jnp.asarray(RNG.normal(size=(Fh, Fw)), jnp.float32)
+    return img, flt
+
+
+@pytest.mark.parametrize("filt", [(3, 3), (7, 7), (11, 11)])
+@pytest.mark.parametrize("cfg", [
+    {"BLOCK_H": 16, "BLOCK_W": 128, "SUB_H": 1, "UNROLL": True,
+     "HALO_MODE": "materialize"},
+    {"BLOCK_H": 32, "BLOCK_W": 128, "SUB_H": 2, "UNROLL": False,
+     "HALO_MODE": "materialize"},
+    {"BLOCK_H": 8, "BLOCK_W": 256, "SUB_H": 4, "UNROLL": True,
+     "HALO_MODE": "materialize"},
+    {"BLOCK_H": 16, "BLOCK_W": 128, "SUB_H": 1, "UNROLL": True,
+     "HALO_MODE": "xla"},
+])
+def test_conv_matches_oracle(filt, cfg):
+    H, W = 64, 256
+    img, f = _data(H, W, *filt)
+    out = make_conv2d(H, W, *filt, cfg, interpret=True)(img, f)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv2d_reference(img, f)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_non_divisible_image_cropped():
+    H, W = 50, 200
+    img, f = _data(H, W, 7, 7)
+    cfg = {"BLOCK_H": 16, "BLOCK_W": 128, "SUB_H": 1, "UNROLL": True,
+           "HALO_MODE": "materialize"}
+    out = make_conv2d(H, W, 7, 7, cfg, interpret=True)(img, f)
+    assert out.shape == (H, W)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv2d_reference(img, f)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_weight_factor():
+    H, W = 32, 128
+    img, f = _data(H, W, 3, 3)
+    cfg = {"BLOCK_H": 16, "BLOCK_W": 128, "SUB_H": 1, "UNROLL": True,
+           "HALO_MODE": "materialize"}
+    out = make_conv2d(H, W, 3, 3, cfg, weight=2.5, interpret=True)(img, f)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(conv2d_reference(img, f, weight=2.5)),
+        rtol=1e-4, atol=1e-4)
+
+
+@given(bh=st.sampled_from([8, 16, 32]), bw=st.sampled_from([128, 256]),
+       sub=st.sampled_from([1, 2]), unroll=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_property_config_sweep(bh, bw, sub, unroll):
+    H, W = 64, 256
+    img, f = _data(H, W, 5, 5)
+    cfg = {"BLOCK_H": bh, "BLOCK_W": bw, "SUB_H": sub, "UNROLL": unroll,
+           "HALO_MODE": "materialize"}
+    out = make_conv2d(H, W, 5, 5, cfg, interpret=True)(img, f)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv2d_reference(img, f)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_caching_strategy_flip_matches_paper():
+    """Paper Table II: L$=0 optimal for 3x3, explicit staging for 11x11."""
+    params, _ = tuning_space(extended=True)
+    import itertools
+
+    def best_mode(fh, fw):
+        best, mode = math.inf, None
+        for vals in itertools.product(*params.values()):
+            cfg = dict(zip(params.keys(), vals))
+            if cfg["BLOCK_H"] % cfg["SUB_H"]:
+                continue
+            t = analytical_time(cfg, TPU_V5E, 8192, 4096, fh, fw)
+            if t < best:
+                best, mode = t, cfg["HALO_MODE"]
+        return mode
+
+    assert best_mode(3, 3) == "xla"
+    assert best_mode(11, 11) == "materialize"
+
+
+def test_flops_formula():
+    # paper footnote 2
+    assert conv_flops(8192, 4096, 3, 3) == (1 + 2 * 9) * 8192 * 4096

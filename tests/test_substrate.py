@@ -1,0 +1,225 @@
+"""Substrate: optimizer, data pipeline, checkpointing, runtime."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.data import DataConfig, Prefetcher, TokenSource
+from repro.optim import adamw
+from repro.runtime import (StragglerConfig, StragglerMonitor, plan_mesh,
+                           validate_batch)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.OptimConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, schedule="constant",
+                            clip_norm=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}          # d/dw (w^2)
+        params, state, _ = adamw.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_clipping_and_metrics():
+    cfg = adamw.OptimConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.ones(4)}
+    state = adamw.init(cfg, params)
+    grads = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw.update(cfg, grads, state, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_schedule_shapes():
+    cfg = adamw.OptimConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1, schedule="cosine")
+    lrs = [float(adamw.schedule_lr(cfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+def test_adamw_bf16_moments():
+    cfg = adamw.OptimConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = adamw.init(cfg, params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, s2, _ = adamw.update(cfg, grads, state, params)
+    assert s2.m["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=100, seed=1)
+    src = TokenSource(cfg)
+    b1, b2 = src.batch(7), src.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(seq_len=32, global_batch=2, vocab_size=100)
+    b = TokenSource(cfg).batch(0)
+    assert b["tokens"].shape == (2, 32)
+    assert b["labels"].shape == (2, 32)
+    # labels[i] continues tokens[i]: overlapping region must match
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_host_sharding_disjoint_and_union():
+    full = DataConfig(seq_len=16, global_batch=8, vocab_size=50, seed=3)
+    h0 = DataConfig(seq_len=16, global_batch=8, vocab_size=50, seed=3,
+                    host_index=0, host_count=2)
+    h1 = DataConfig(seq_len=16, global_batch=8, vocab_size=50, seed=3,
+                    host_index=1, host_count=2)
+    bf = TokenSource(full).batch(5)
+    b0 = TokenSource(h0).batch(5)
+    b1 = TokenSource(h1).batch(5)
+    np.testing.assert_array_equal(
+        np.concatenate([b0["tokens"], b1["tokens"]]), bf["tokens"])
+
+
+def test_data_tokens_in_vocab_range():
+    cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=37)
+    b = TokenSource(cfg).batch(0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < 37
+
+
+def test_prefetcher_ordered_and_resumable():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=50)
+    src = TokenSource(cfg)
+    pf = Prefetcher(src, start_step=5, depth=2)
+    steps = []
+    for _ in range(3):
+        s, batch = next(pf)
+        steps.append(s)
+        np.testing.assert_array_equal(batch["tokens"],
+                                      src.batch(s)["tokens"])
+    pf.close()
+    assert steps == [5, 6, 7]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 4), x), "b": {"c": jnp.arange(8)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(3, _tree(2.0), extra={"note": "x"})
+    out = mgr.restore(template=_tree())
+    assert out["step"] == 3
+    assert out["extra"]["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(out["tree"]["a"]),
+                                  np.full((4, 4), 2.0))
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)))
+    assert mgr.steps() == [3, 4]
+
+
+def test_checkpoint_latest_ignores_partial(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _tree())
+    # simulate a torn write: directory without manifest
+    os.makedirs(tmp_path / "step_000009")
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(7, _tree(7.0), block=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    assert mgr.verify(7)
+
+
+def test_checkpoint_verify_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    assert mgr.verify(1)
+    # corrupt the arrays file
+    with open(tmp_path / "step_000001" / "arrays.npz", "wb") as f:
+        f.write(b"garbage")
+    assert not mgr.verify(1)
+
+
+def test_checkpoint_namedtuple_roundtrip(tmp_path):
+    state = adamw.init(adamw.OptimConfig(), {"w": jnp.ones(3)})
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"opt": {"m": state.m, "v": state.v, "count": state.count}})
+    out = mgr.restore(template={"opt": {"m": state.m, "v": state.v,
+                                        "count": state.count}})
+    assert out["tree"]["opt"]["count"].shape == ()
+
+
+# ---------------------------------------------------------------------------
+# runtime: straggler + elastic
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_outliers():
+    events_seen = []
+    mon = StragglerMonitor(StragglerConfig(window=30, z_threshold=4.0,
+                                           patience=2, warmup_steps=5),
+                           on_straggler=events_seen.append)
+    for _ in range(20):
+        mon.observe(0.10)
+    assert not mon.events
+    e1 = mon.observe(1.0)
+    assert e1 and not e1["mitigate"]
+    e2 = mon.observe(1.0)
+    assert e2 and e2["mitigate"]
+    assert events_seen and events_seen[0]["consecutive"] == 2
+
+
+def test_straggler_tolerates_jitter():
+    mon = StragglerMonitor(StragglerConfig(window=30, warmup_steps=5))
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        mon.observe(0.1 + rng.normal(0, 0.005))
+    assert not mon.events
+
+
+def test_elastic_mesh_planning():
+    d = plan_mesh(512, model_parallel=16)
+    assert d.mesh_shape == (2, 16, 16) and d.dropped == 0
+    d = plan_mesh(256, model_parallel=16)
+    assert d.mesh_shape == (16, 16)
+    d = plan_mesh(250, model_parallel=16)        # lost 6 devices
+    assert d.mesh_shape == (15, 16) and d.dropped == 10
+    d = plan_mesh(8, model_parallel=16)          # degraded
+    assert d.mesh_shape[1] <= 8
+
+
+def test_validate_batch():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    assert validate_batch(256, FakeMesh())
+    assert not validate_batch(250, FakeMesh())

@@ -1,0 +1,55 @@
+"""Sharding auto-tuner: space construction + config translation."""
+
+import dataclasses
+
+from repro.models.model import RunConfig
+from repro.tune import build_space, config_to_run_rules
+
+
+def test_train_space_has_train_knobs():
+    sp = build_space("qwen2.5-32b", "train_4k", heads_divisible=False)
+    names = set(sp.names)
+    assert {"REMAT", "MICROBATCH", "CE_CHUNK", "ACCUM_DTYPE",
+            "ATTN_CHUNK", "ATTN_MODE", "SEQ_ATTN", "FSDP"} <= names
+    # indivisible heads: no feasible expanded-mode config
+    for cfg in sp.enumerate(limit=500):
+        assert cfg["ATTN_MODE"] != "expanded"
+
+
+def test_decode_space_has_cache_layout():
+    sp = build_space("mistral-large-123b", "decode_32k",
+                     heads_divisible=True)
+    assert "SEQ_KV" in sp.names
+    assert "REMAT" not in sp.names          # no training knobs at decode
+
+
+def test_moe_space_has_dispatch_impl():
+    sp = build_space("kimi-k2-1t-a32b", "train_4k", heads_divisible=True,
+                     is_moe=True)
+    assert "MOE_IMPL" in sp.names
+
+
+def test_microbatch_divides_batch_constraint():
+    sp = build_space("granite-3-2b", "train_4k", heads_divisible=True)
+    for cfg in sp.enumerate(limit=2000):
+        assert 256 % cfg["MICROBATCH"] == 0
+
+
+def test_config_translation_roundtrip():
+    base = RunConfig()
+    cfg = {"REMAT": "dots", "MICROBATCH": 8, "CE_CHUNK": 512,
+           "ACCUM_DTYPE": "bfloat16", "ATTN_CHUNK": 2048,
+           "ATTN_MODE": "expanded", "SEQ_ATTN": "model",
+           "FSDP": "pod_data", "MOE_IMPL": "gather"}
+    run, rules = config_to_run_rules(cfg, base)
+    assert run.remat == "dots" and run.microbatch == 8
+    assert run.ce_chunk == 512 and run.accum_dtype == "bfloat16"
+    assert run.attn_chunk == 2048 and run.attn_mode == "expanded"
+    assert run.moe_impl == "gather"
+    assert rules["seq_attn"] == "model"
+    assert rules["embed"] == ("pod", "data")
+
+
+def test_fsdp_none_translates_to_unsharded_embed():
+    _, rules = config_to_run_rules({"FSDP": "none"}, RunConfig())
+    assert rules["embed"] is None
