@@ -1,41 +1,52 @@
-"""Quickstart — the paper's Fig. 1 example, ported to JAX.
+"""Quickstart — the paper's Fig. 1 example on the declarative API.
 
 The OpenCL original tunes a copy kernel's work-per-thread over {1,2,4}.
-Here the same five-line flow tunes a JAX kernel's layout parameter with
-real wall-clock measurement and output verification.
+Here the same flow is one `@tunable` declaration plus a one-line
+``tune_kernel`` call, with real wall-clock measurement and output
+verification.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import Tuner, WallClockEvaluator
+from repro.core import SearchSpace, WallClockEvaluator, lookup, tunable
+from repro.tune import tune_kernel
 
 N = 1 << 20
 
 
-def build_copy(cfg):
+def copy_space(shape):
+    sp = SearchSpace()
+    sp.add_parameter(name="WPT", values=(1, 2, 4))           # AddParameter
+    sp.add_constraint(lambda w: shape["N"] % w == 0, ("WPT",), "N % WPT")
+    return sp
+
+
+@tunable(name="copy", space=copy_space,                      # AddKernel
+         heuristic=lambda s: {"WPT": 1},
+         make_args=lambda s, rng: (jnp.asarray(rng.normal(size=s["N"]),
+                                               jnp.float32),),
+         reference=lambda s: (lambda x: x))                  # SetReference
+def copy_kernel(shape, config):
     """The 'kernel': a copy whose access pattern depends on WPT."""
-    wpt = cfg["WPT"]
+    n, wpt = shape["N"], config["WPT"]
 
     def copy(x):
-        return x.reshape(N // wpt, wpt).reshape(N)
+        return x.reshape(n // wpt, wpt).reshape(n)
     return copy
 
 
 def main():
-    tuner = Tuner(evaluator=WallClockEvaluator(repeats=5))
-    tuner.set_reference(lambda x: x)                       # SetReference
-    tuner.add_kernel(                                      # AddKernel
-        build_copy, name="copy",
-        make_args=lambda rng: (jnp.asarray(rng.normal(size=N),
-                                           jnp.float32),))
-    tuner.add_parameter("WPT", [1, 2, 4])                  # AddParameter
-    outcome = tuner.tune(strategy="full")                  # Tune
+    outcome = tune_kernel("copy", {"N": N}, strategy="full",  # Tune
+                          evaluator=WallClockEvaluator(repeats=5))
     print(outcome.report())
     print(f"\nbest WPT = {outcome.best_config['WPT']} "
           f"({outcome.best_time * 1e6:.1f} us)")
+
+    # after tuning, every call site resolves the winner through the registry
+    cfg = lookup("copy", {"N": N})
+    print(f"registry lookup -> {cfg}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,10 @@
 """GEMM auto-tuning — the paper's section VI case study on TPU profiles.
 
 Explores the >200k-configuration space with simulated annealing and PSO on
-four TPU device profiles, showing (a) strategies beat random search,
-(b) best configurations differ per device (paper Table IV), and (c) the
-tuned configuration lands in the results cache that ``repro.kernels.matmul
-.matmul`` consults at run time.
+TPU device profiles through the one-shot ``tune_kernel`` API, showing
+(a) strategies beat random search, (b) best configurations differ per
+device (paper Table IV), and (c) the tuned configuration lands in the
+results cache that ``repro.kernels.matmul.matmul`` consults at run time.
 
 Run:  PYTHONPATH=src python examples/tune_gemm.py [--budget 117]
 """
@@ -12,9 +12,10 @@ Run:  PYTHONPATH=src python examples/tune_gemm.py [--budget 117]
 import argparse
 
 from repro.core import PROFILES, TPUAnalyticalEvaluator
-from repro.kernels.matmul import make_tuner, shape_key
+from repro.tune import tune_kernel
 
 M = N = K = 2048
+SHAPE = {"M": M, "N": N, "K": K}
 
 
 def main():
@@ -29,13 +30,11 @@ def main():
         for strategy, kw in [("random", {}),
                              ("annealing", {"temperature": 4.0}),
                              ("pso", {"swarm_size": 3})]:
-            tuner = make_tuner(
-                M, N, K, extended_space=True,
+            out = tune_kernel(
+                "gemm", SHAPE, strategy=strategy, budget=args.budget,
+                seed=0, profile=profile, extended_space=True,
                 evaluator=TPUAnalyticalEvaluator(profile=profile, seed=0),
-                profile=profile)
-            out = tuner.tune(strategy=strategy, budget=args.budget, seed=0,
-                             record_to_cache=(strategy == "annealing"),
-                             shape_key=shape_key(M, N, K), **kw)
+                record=(strategy == "annealing"), **kw)
             gf = 2.0 * M * N * K / out.best_time / 1e9
             print(f"  {strategy:10s} best={out.best_time * 1e6:9.1f} us "
                   f"({gf:7.0f} GFLOPS)  {out.best_config}")

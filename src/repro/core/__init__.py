@@ -15,6 +15,9 @@ from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
 from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
+from .registry import (REGISTRY, AutotunePolicy, KernelRegistry,
+                       TunableKernel, default_policy, lookup, resolve,
+                       tunable)
 from .space import Config, Constraint, Parameter, SearchSpace
 from .strategies import (Evolutionary, FullSearch,
                          GreedyCoordinateDescent, ParticleSwarm,
@@ -31,6 +34,8 @@ __all__ = [
     "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",
+    "REGISTRY", "AutotunePolicy", "KernelRegistry", "TunableKernel",
+    "default_policy", "lookup", "resolve", "tunable",
     "Config", "Constraint", "Parameter", "SearchSpace",
     "Evolutionary", "FullSearch", "GreedyCoordinateDescent",
     "ParticleSwarm", "RandomSearch",

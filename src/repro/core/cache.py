@@ -20,6 +20,14 @@ from typing import Any, Dict, Optional
 _DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "tune",
                              "tuned_configs.json")
 
+#: env var overriding where the default cache lives (deployments keep the
+#: database outside the source tree; tests point it at a tmp dir)
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def _default_path() -> str:
+    return os.environ.get(_ENV_VAR) or _DEFAULT_PATH
+
 
 def _key(kernel: str, shape_key: str, profile: str) -> str:
     return f"{kernel}|{shape_key}|{profile}"
@@ -45,7 +53,7 @@ class TuningCache:
     """Thread-safe JSON-backed map: (kernel, shape, profile) -> best config."""
 
     def __init__(self, path: Optional[str] = None):
-        self.path = os.path.abspath(path or _DEFAULT_PATH)
+        self.path = os.path.abspath(path or _default_path())
         self._lock = threading.Lock()
         self._data: Dict[str, Dict[str, Any]] = {}
         self._loaded = False
@@ -105,12 +113,27 @@ class TuningCache:
             config=config, time_s=time_s, strategy=strategy,
             evaluations=evaluations, timestamp=time.time()))
 
+    def clear(self, delete_file: bool = False) -> None:
+        """Drop all in-memory entries; optionally unlink the backing file."""
+        with self._lock:
+            self._data = {}
+            self._loaded = True
+            if delete_file and os.path.exists(self.path):
+                os.unlink(self.path)
+
+    def __len__(self) -> int:
+        self._ensure()
+        return len(self._data)
+
 
 _default_cache: Optional[TuningCache] = None
 
 
 def default_cache() -> TuningCache:
+    """The process-wide cache.  Re-resolved when REPRO_TUNE_CACHE changes,
+    so tests can monkeypatch the env var and get a fresh isolated cache."""
     global _default_cache
-    if _default_cache is None:
-        _default_cache = TuningCache()
+    path = os.path.abspath(_default_path())
+    if _default_cache is None or _default_cache.path != path:
+        _default_cache = TuningCache(path)
     return _default_cache

@@ -176,6 +176,8 @@ class CostModelEvaluator(Evaluator):
             compiled = lowered.compile()
             compile_s = time.perf_counter() - t0
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):   # older jax: one dict/device
+                cost = cost[0] if cost else {}
         except Exception as e:  # noqa: BLE001
             return _failed(e)
         flops = float(cost.get("flops", 0.0))

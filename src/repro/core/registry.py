@@ -1,0 +1,316 @@
+"""Declarative tunable-kernel registry — one declaration API for any kernel.
+
+CLTune's promise is a *generic* tuner: any kernel, any parameter space,
+re-tuned per input shape (paper scenarios 1 and 3).  The registry is the
+generic half of that promise on the framework side: a kernel package
+declares *what* is tunable once, via :func:`tunable`, and every consumer —
+the one-shot ``repro.tune.api.tune_kernel``, the batch ``TuningSession``,
+the serving engine, the public ops — resolves configurations through
+:func:`lookup` instead of hand-rolling per-kernel ``shape_key`` /
+``heuristic_config`` / ``lookup_config`` / ``make_tuner`` boilerplate.
+
+A *shape* here is a plain dict of the kernel's problem dimensions
+(``{"M": 2048, "N": 2048, "K": 2048}``); every declared callback takes it
+as its first argument, so one :class:`TunableKernel` covers the whole shape
+family and the cache keys instances by ``shape_key(shape)``.
+
+Declaration (the whole public surface a new workload needs):
+
+    @tunable(name="gemm",
+             space=gemm_space,            # shape -> SearchSpace
+             heuristic=gemm_heuristic,    # shape -> Config fallback
+             analytical_model=gemm_time,  # (shape, config, profile) -> s
+             vmem_footprint=gemm_vmem,    # (shape, config) -> bytes
+             reference=gemm_oracle)       # shape -> callable oracle
+    def gemm(shape, config, *, interpret=False):
+        return make_matmul(shape["M"], shape["N"], shape["K"], config,
+                           interpret=interpret)
+
+Call-site resolution, with the tune-on-miss policy of dynamic autotuners
+(Kernel Tuning Toolkit, arXiv:1910.08498):
+
+    cfg = lookup("gemm", {"M": M, "N": N, "K": K},
+                 policy=AutotunePolicy.ON_MISS)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import inspect
+import logging
+import os
+from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+from .cache import TuningCache, default_cache
+from .profiles import DeviceProfile, TPU_V5E
+from .space import Config, SearchSpace
+
+log = logging.getLogger("repro.registry")
+
+Shape = Mapping[str, Any]
+
+
+class AutotunePolicy(enum.Enum):
+    """What :func:`lookup` does when the cache has no entry for a shape.
+
+    * ``OFF``     — cache hit or the declared heuristic; never tunes.
+    * ``ON_MISS`` — cache hit, else run a (budgeted) search once, record it,
+                    and return the winner; the KTT-style dynamic mode.
+    * ``ALWAYS``  — re-tune on every call (benchmarking / device bring-up).
+    """
+
+    OFF = "off"
+    ON_MISS = "on_miss"
+    ALWAYS = "always"
+
+    @classmethod
+    def coerce(cls, value: "AutotunePolicy | str | None") -> "AutotunePolicy":
+        if value is None:
+            return default_policy()
+        if isinstance(value, cls):
+            return value
+        try:
+            return cls(str(value).lower())
+        except ValueError as e:
+            raise ValueError(
+                f"unknown autotune policy {value!r}; "
+                f"known: {[p.value for p in cls]}") from e
+
+
+def default_policy() -> AutotunePolicy:
+    """Process-wide default policy, overridable via ``REPRO_AUTOTUNE``."""
+    return AutotunePolicy.coerce(os.environ.get("REPRO_AUTOTUNE", "off"))
+
+
+def _accepts(fn: Callable, kwarg: str) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):    # builtins / C callables
+        return False
+    return kwarg in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableKernel:
+    """One kernel family's complete tuning declaration.
+
+    Required: ``name``, ``build(shape, config)`` (jit-able callable factory,
+    may take ``interpret=``), ``space(shape) -> SearchSpace`` and
+    ``heuristic(shape) -> Config``.  Everything else feeds specific
+    evaluators or the verification path and is optional — exactly like the
+    optional arguments of CLTune's ``AddKernel``.
+    """
+
+    name: str
+    build: Callable[..., Callable]
+    space: Callable[..., SearchSpace]
+    heuristic: Callable[[Shape], Config]
+    #: cache key for a shape; default joins sorted ``dim=value`` pairs
+    shape_key: Optional[Callable[[Shape], str]] = None
+    #: concrete host arguments for wall-clock runs + verification
+    make_args: Optional[Callable[[Shape, np.random.Generator], Tuple]] = None
+    #: abstract args (ShapeDtypeStruct pytree) for lowering-based evaluation
+    arg_specs: Optional[Callable[[Shape], Tuple]] = None
+    #: structural time model: (shape, config, profile) -> seconds
+    analytical_model: Optional[
+        Callable[[Shape, Config, DeviceProfile], float]] = None
+    #: working-set size: (shape, config) -> bytes, for device auto-constraints
+    vmem_footprint: Optional[Callable[[Shape, Config], int]] = None
+    #: shape -> oracle callable, for SetReference-style verification
+    reference: Optional[Callable[[Shape], Callable]] = None
+    #: shapes a TuningSession sweeps when none are given explicitly
+    default_shapes: Tuple[Dict[str, Any], ...] = ()
+    #: per-kernel tuning defaults consumed by tune_kernel (strategy, budget)
+    defaults: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    tags: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("TunableKernel needs a non-empty name")
+
+    # -- resolution helpers ----------------------------------------------------
+    def key_for(self, shape: Shape) -> str:
+        if self.shape_key is not None:
+            return self.shape_key(shape)
+        return "_".join(f"{k}{shape[k]}" for k in sorted(shape))
+
+    def make_space(self, shape: Shape, extended: bool = False) -> SearchSpace:
+        if _accepts(self.space, "extended"):
+            sp = self.space(shape, extended=extended)
+        else:
+            sp = self.space(shape)
+        if not isinstance(sp, SearchSpace):
+            raise TypeError(f"{self.name}: space() must return a SearchSpace, "
+                            f"got {type(sp).__name__}")
+        return sp
+
+    def builder(self, shape: Shape, config: Config,
+                interpret: bool = False) -> Callable:
+        if _accepts(self.build, "interpret"):
+            return self.build(shape, config, interpret=interpret)
+        return self.build(shape, config)
+
+    def __call__(self, shape: Shape, config: Config, **kwargs) -> Callable:
+        return self.build(shape, config, **kwargs)
+
+    def __repr__(self) -> str:
+        opt = [f for f in ("make_args", "arg_specs", "analytical_model",
+                           "vmem_footprint", "reference")
+               if getattr(self, f) is not None]
+        return f"TunableKernel({self.name!r}, with={opt})"
+
+
+class KernelRegistry:
+    """Name -> :class:`TunableKernel` map the runtime consults."""
+
+    def __init__(self):
+        self._kernels: Dict[str, TunableKernel] = {}
+
+    def register(self, kernel: TunableKernel,
+                 replace: bool = False) -> TunableKernel:
+        if not isinstance(kernel, TunableKernel):
+            raise TypeError(f"expected TunableKernel, got {type(kernel).__name__}")
+        if kernel.name in self._kernels and not replace:
+            raise ValueError(f"kernel {kernel.name!r} is already registered; "
+                             "pass replace=True to override")
+        self._kernels[kernel.name] = kernel
+        return kernel
+
+    def unregister(self, name: str) -> bool:
+        return self._kernels.pop(name, None) is not None
+
+    def get(self, name: str) -> TunableKernel:
+        try:
+            return self._kernels[name]
+        except KeyError as e:
+            raise KeyError(f"no tunable kernel {name!r} registered; "
+                           f"known: {self.names()}") from e
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._kernels))
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._kernels
+
+    def __iter__(self) -> Iterator[TunableKernel]:
+        return iter(self._kernels[n] for n in self.names())
+
+    def __len__(self) -> int:
+        return len(self._kernels)
+
+    def __repr__(self) -> str:
+        return f"KernelRegistry({list(self.names())})"
+
+
+#: The process-wide registry the `@tunable` decorator populates.
+REGISTRY = KernelRegistry()
+
+
+def _ensure_builtins() -> None:
+    """Import the packages whose module-level `@tunable` declarations
+    populate the global registry, so by-name resolution works without the
+    caller knowing which module declares a kernel."""
+    import importlib
+    for module in ("repro.kernels", "repro.tune.sharding_autotune"):
+        try:
+            importlib.import_module(module)
+        except Exception as e:  # noqa: BLE001 — optional deps may be absent
+            log.warning("builtin tunables: could not import %s (%s: %s)",
+                        module, type(e).__name__, e)
+
+
+def resolve(kernel: "TunableKernel | str",
+            registry: Optional[KernelRegistry] = None) -> TunableKernel:
+    """Accept either a kernel object or a registered name."""
+    if isinstance(kernel, TunableKernel):
+        return kernel
+    # NB: "registry or REGISTRY" would treat an empty registry as absent
+    reg = REGISTRY if registry is None else registry
+    if reg is REGISTRY and kernel not in reg:
+        _ensure_builtins()
+    return reg.get(str(kernel))
+
+
+def tunable(name: str, *, space: Callable[..., SearchSpace],
+            heuristic: Callable[[Shape], Config],
+            shape_key: Optional[Callable[[Shape], str]] = None,
+            make_args: Optional[Callable] = None,
+            arg_specs: Optional[Callable] = None,
+            analytical_model: Optional[Callable] = None,
+            vmem_footprint: Optional[Callable] = None,
+            reference: Optional[Callable] = None,
+            default_shapes: Sequence[Mapping[str, Any]] = (),
+            defaults: Optional[Dict[str, Any]] = None,
+            tags: Sequence[str] = (),
+            register: bool = True,
+            registry: Optional[KernelRegistry] = None
+            ) -> Callable[[Callable], TunableKernel]:
+    """Decorator: turn a ``build(shape, config)`` function into a registered
+    :class:`TunableKernel`.  The decorated name becomes the kernel object
+    (callable with the same signature), so a module-level declaration is the
+    entire integration surface for a new workload.
+    """
+
+    def deco(build: Callable) -> TunableKernel:
+        kernel = TunableKernel(
+            name=name, build=build, space=space, heuristic=heuristic,
+            shape_key=shape_key, make_args=make_args, arg_specs=arg_specs,
+            analytical_model=analytical_model, vmem_footprint=vmem_footprint,
+            reference=reference,
+            default_shapes=tuple(dict(s) for s in default_shapes),
+            defaults=dict(defaults or {}), tags=tuple(tags))
+        if register:
+            (REGISTRY if registry is None else registry).register(kernel)
+        return kernel
+
+    return deco
+
+
+def lookup(kernel: "TunableKernel | str", shape: Shape, *,
+           profile: DeviceProfile = TPU_V5E,
+           cache: Optional[TuningCache] = None,
+           policy: "AutotunePolicy | str | None" = None,
+           registry: Optional[KernelRegistry] = None,
+           **tune_kwargs) -> Config:
+    """Resolve the configuration to run ``kernel`` with for ``shape``.
+
+    Resolution order: tuned-cache hit -> (policy permitting) one-shot tune
+    recorded back into the cache -> the kernel's declared heuristic.  This is
+    the single code path behind every public op's ``config=None`` default.
+    ``tune_kwargs`` (strategy/budget/evaluator/seed/...) flow to
+    ``repro.tune.api.tune_kernel`` when a search actually runs.
+    """
+    k = resolve(kernel, registry)
+    cache = cache if cache is not None else default_cache()
+    pol = AutotunePolicy.coerce(policy)
+    shape = dict(shape)
+    key = k.key_for(shape)
+
+    if pol is not AutotunePolicy.ALWAYS:
+        entry = cache.get(k.name, key, profile.name)
+        if entry is not None:
+            return dict(entry.config)
+        if pol is AutotunePolicy.OFF:
+            return dict(k.heuristic(shape))
+
+    # tune-on-miss / always: run the generic one-shot search.  A shape the
+    # declared space cannot cover (e.g. tiny decode batches) must not crash
+    # the call site — the heuristic is the universal fallback.
+    from ..tune.api import tune_kernel   # late: tune layers above core
+    log.info("autotune (%s): kernel=%s shape=%s", pol.value, k.name, key)
+    tune_kwargs.setdefault("record", True)
+    try:
+        outcome = tune_kernel(k, shape, profile=profile, cache=cache,
+                              **tune_kwargs)
+    except Exception as e:  # noqa: BLE001 — infeasible space / search error
+        log.warning("autotune failed for %s %s (%s); using heuristic",
+                    k.name, key, e)
+        return dict(k.heuristic(shape))
+    if outcome.best_config is not None:
+        return dict(outcome.best_config)
+    return dict(k.heuristic(shape))

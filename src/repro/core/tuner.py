@@ -19,6 +19,11 @@ This port:
     tuner.set_reference(ref_copy)
     outcome = tuner.tune(strategy="full")
 
+Kernels declared through the registry (``@tunable``) skip the fluent
+construction entirely: ``Tuner.from_tunable(kernel, shape)`` builds the
+same object from the declaration (and the fluent methods remain usable on
+it as a compatibility layer).
+
 ``DivGlobalSize``/``MulLocalSize`` disappear: in Pallas the grid is computed
 from the block shape inside ``build``, so thread-geometry bookkeeping lives
 with the kernel, not the tuner.  Device-limit auto-constraints (paper III-A)
@@ -36,8 +41,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from .cache import TuningCache, default_cache
-from .evaluators import Evaluator, KernelSpec, Measurement, WallClockEvaluator
+from .evaluators import (Evaluator, KernelSpec, Measurement,
+                         TPUAnalyticalEvaluator, WallClockEvaluator)
 from .profiles import DeviceProfile, TPU_V5E
+from .registry import Shape, TunableKernel, resolve
 from .space import Config, Parameter, SearchSpace
 from .strategies import SearchResult, Strategy, make_strategy
 
@@ -53,6 +60,8 @@ class TuningOutcome:
     measurements: Dict[tuple, Measurement]
     evaluator: str
     profile: str
+    #: the evaluation budget actually used (None = exhaustive full search)
+    budget: Optional[int] = None
 
     @property
     def best_config(self) -> Optional[Config]:
@@ -70,10 +79,12 @@ class TuningOutcome:
         return sum(1 for t in self.result.trials if not t.ok) / n
 
     def report(self, top_k: int = 5) -> str:
+        budget = "exhaustive" if self.budget is None else str(self.budget)
         lines = [f"== tuning report: {self.kernel} "
                  f"(strategy={self.result.strategy}, "
                  f"evaluator={self.evaluator}, profile={self.profile}) ==",
-                 f"evaluated {self.result.evaluations} configurations, "
+                 f"evaluated {self.result.evaluations} configurations "
+                 f"(budget={budget}), "
                  f"{self.failed_fraction:.0%} failed/infeasible"]
         ok = sorted((t for t in self.result.trials if t.ok),
                     key=lambda t: t.time)
@@ -96,6 +107,52 @@ class Tuner:
         self._spec: Optional[KernelSpec] = None
         self._cache = cache
         self._reference: Optional[Callable] = None
+        self._vmem_footprint: Optional[Callable[[Config], int]] = None
+        self._vmem_constraint_added = False
+
+    # -- declarative construction ---------------------------------------------
+    @classmethod
+    def from_tunable(cls, kernel: "TunableKernel | str", shape: Shape, *,
+                     evaluator: Optional[Evaluator] = None,
+                     profile: DeviceProfile = TPU_V5E,
+                     cache: Optional[TuningCache] = None,
+                     interpret: bool = True,
+                     extended_space: bool = False) -> "Tuner":
+        """Build a ready-to-run Tuner from a :class:`TunableKernel` spec.
+
+        This is the registry-era replacement for the per-kernel
+        ``make_tuner`` boilerplate: the declaration carries the space,
+        constraints, heuristics, models and reference, so instantiating a
+        tuner for a concrete shape is one call.  The fluent
+        ``add_parameter``/``add_constraint`` methods still work on the
+        result (CLTune-style compatibility layer).
+        """
+        k = resolve(kernel)
+        shape = dict(shape)
+        if evaluator is None:
+            evaluator = (TPUAnalyticalEvaluator(profile=profile)
+                         if k.analytical_model is not None
+                         else WallClockEvaluator())
+        tuner = cls(evaluator=evaluator, profile=profile, cache=cache)
+        tuner.space = k.make_space(shape, extended=extended_space)
+        if k.reference is not None:
+            tuner.set_reference(k.reference(shape))
+        tuner.add_kernel(
+            lambda cfg: k.builder(shape, cfg, interpret=interpret),
+            name=k.name,
+            make_args=((lambda rng: k.make_args(shape, rng))
+                       if k.make_args is not None else None),
+            arg_specs=((lambda: k.arg_specs(shape))
+                       if k.arg_specs is not None else None),
+            analytical_model=((lambda cfg, prof:
+                               k.analytical_model(shape, cfg, prof))
+                              if k.analytical_model is not None else None),
+            vmem_footprint=((lambda cfg: k.vmem_footprint(shape, cfg))
+                            if k.vmem_footprint is not None else None),
+            meta=dict(shape))
+        tuner._tunable = k
+        tuner._shape = shape
+        return tuner
 
     # -- CLTune-style declaration ---------------------------------------------
     def add_kernel(self, build: Callable[[Config], Callable],
@@ -179,15 +236,24 @@ class Tuner:
                 log.debug("config %s failed: %s", config, m.error)
             return m.time_s
 
-        if budget is None and strat.name != "full":
-            budget = max(1, self.space.cardinality() // 32)   # paper's 1/32nd
+        if strat.name == "full":
+            # None = exhaustive; an explicit budget still caps enumeration
+            budget = max(1, budget) if budget is not None else None
+        else:
+            card = self.space.cardinality()
+            if budget is None:
+                # paper's 1/32nd rule, clamped: tiny spaces are swept whole
+                # instead of degenerating to a single sample.
+                budget = card if card <= 32 else max(1, card // 32)
+            budget = max(1, min(budget, card))  # never exceed the space
         result = strat.run(self.space, objective, budget, seed=seed)
 
         outcome = TuningOutcome(
             kernel=self._spec.name, result=result, measurements=measurements,
-            evaluator=self.evaluator.name, profile=self.profile.name)
+            evaluator=self.evaluator.name, profile=self.profile.name,
+            budget=budget)
         if record_to_cache and result.best is not None:
-            cache = self._cache or default_cache()
+            cache = self._cache if self._cache is not None else default_cache()
             cache.record(self._spec.name, shape_key or "default",
                          self.profile.name, result.best.config,
                          result.best.time, result.strategy,

@@ -1,0 +1,38 @@
+"""Distribution layer: logical-axis sharding rules, partition specs, and the
+jit-able train/prefill/serve step functions.
+
+``sharding``  — logical axis -> mesh axis rules, ``shard`` annotations and
+                ``spec_for`` (divisibility + mesh-axis dedup).
+``partition`` — NamedSharding trees for params / optimizer / batch / cache.
+``step``      — ``make_train_step`` / ``make_prefill_step`` /
+                ``make_serve_step`` factories shared by training, serving
+                and the multi-pod dry-run.
+
+``partition``/``step`` sit *above* the model layer (they import it), while
+``sharding`` sits below (the model imports ``shard``), so only ``sharding``
+is imported eagerly here; the rest resolves lazily to keep
+``import repro.models`` acyclic.
+"""
+
+from .sharding import DEFAULT_RULES, shard, spec_for, use_sharding
+
+__all__ = ["partition", "sharding", "step",
+           "DEFAULT_RULES", "shard", "spec_for", "use_sharding",
+           "make_prefill_step", "make_serve_step", "make_train_step"]
+
+_LAZY = {
+    "partition": ("repro.dist.partition", None),
+    "step": ("repro.dist.step", None),
+    "make_prefill_step": ("repro.dist.step", "make_prefill_step"),
+    "make_serve_step": ("repro.dist.step", "make_serve_step"),
+    "make_train_step": ("repro.dist.step", "make_train_step"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        mod = importlib.import_module(module)
+        return getattr(mod, attr) if attr else mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

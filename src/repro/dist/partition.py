@@ -1,0 +1,86 @@
+"""NamedSharding trees for every jit boundary: params, optimizer, batch,
+decode cache.
+
+All trees are derived from the same source of truth the initialisers use —
+the ``ParamDef`` trees and their logical axes — so a parameter can never be
+initialised with one layout and jitted with another.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .sharding import DEFAULT_RULES, spec_for
+
+
+def _merged(rules: Optional[Mapping[str, Any]]) -> Dict[str, Any]:
+    out = dict(DEFAULT_RULES)
+    if rules:
+        out.update(rules)
+    return out
+
+
+def _def_tree_shardings(defs: Any, mesh: Mesh,
+                        rules: Mapping[str, Any]) -> Any:
+    from ..models.params import tree_paths, _unflatten
+    flat = tree_paths(defs)
+    out = {path: NamedSharding(mesh, spec_for(d.shape, d.axes, rules, mesh))
+           for path, d in flat.items()}
+    return _unflatten(out)
+
+
+def model_shardings(cfg, mesh: Mesh,
+                    rules: Optional[Mapping[str, Any]] = None) -> Any:
+    """NamedSharding tree mirroring ``model_defs(cfg)``."""
+    from ..models.model import model_defs
+    return _def_tree_shardings(model_defs(cfg), mesh, _merged(rules))
+
+
+def cache_shardings(cfg, batch: int, max_len: int, mesh: Mesh,
+                    rules: Optional[Mapping[str, Any]] = None) -> Any:
+    """NamedSharding tree mirroring ``cache_defs`` (decode KV/SSM state)."""
+    from ..models.model import cache_defs
+    return _def_tree_shardings(cache_defs(cfg, batch, max_len), mesh,
+                               _merged(rules))
+
+
+def opt_shardings(param_shardings: Any, mesh: Mesh):
+    """Optimizer state shardings: moments mirror the parameters (fully
+    sharded optimizer), the step counter is replicated."""
+    import jax
+    from ..optim.adamw import OptState
+    rep = NamedSharding(mesh, PartitionSpec())
+    copy = lambda tree: jax.tree_util.tree_map(lambda s: s, tree)
+    return OptState(m=copy(param_shardings), v=copy(param_shardings),
+                    count=rep)
+
+
+def batch_shardings(cfg, shape, mesh: Mesh,
+                    rules: Optional[Mapping[str, Any]] = None
+                    ) -> Dict[str, NamedSharding]:
+    """Shardings for the input batch of one (model, shape) cell, keyed like
+    ``repro.configs.input_specs``: train/prefill get tokens-or-embeds (+
+    labels), decode gets the single-token ``inputs``."""
+    if isinstance(shape, str):
+        from ..models.config import SHAPES
+        shape = SHAPES[shape]
+    merged = _merged(rules)
+    B, S = shape.global_batch, shape.seq_len
+
+    def mk(shp, axes):
+        return NamedSharding(mesh, spec_for(shp, axes, merged, mesh))
+
+    if shape.kind == "decode":
+        if cfg.input_mode == "embeddings":
+            return {"inputs": mk((B, 1, cfg.d_model), ("batch", None, None))}
+        return {"inputs": mk((B, 1), ("batch", None))}
+    out: Dict[str, NamedSharding] = {}
+    if cfg.input_mode == "embeddings":
+        out["embeds"] = mk((B, S, cfg.d_model), ("batch", "seq", None))
+    else:
+        out["tokens"] = mk((B, S), ("batch", "seq"))
+    if shape.kind == "train":
+        out["labels"] = mk((B, S), ("batch", "seq"))
+    return out

@@ -1,0 +1,141 @@
+"""Logical-axis sharding: rules, specs, and in-model annotations.
+
+Model code never names mesh axes.  It tags tensor dimensions with *logical*
+axes (``shard(x, "batch", "seq", "embed")``; ``ParamDef.axes``) and this
+module maps them onto whatever mesh is active through a rules table:
+
+    rules = {"batch": ("pod", "data"), "heads": "model", ...}
+
+``spec_for`` turns (shape, logical axes) into a ``PartitionSpec`` with the
+two safety properties the 512-chip sweeps rely on:
+
+  * divisibility — a dimension that does not divide the mapped mesh-axis
+    extent is left replicated instead of crashing the lowering;
+  * dedup — a mesh axis is claimed by at most one tensor dimension
+    (first-come, left-to-right), so ``("batch", "seq", "embed")`` under
+    FSDP rules cannot double-bind ``data``.
+
+``use_sharding`` installs (mesh, rules) for a ``with`` scope; ``shard`` is
+a no-op outside one, which is what keeps single-device smoke tests and
+Pallas-interpret runs oblivious to distribution.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: logical axis -> mesh axis (str), mesh axes (tuple, major-to-minor), or
+#: None (replicated).  Axes absent from the active mesh are filtered, so one
+#: table serves both the single-pod ("data", "model") and multi-pod
+#: ("pod", "data", "model") meshes.
+DEFAULT_RULES: Dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_attn": None,        # sequence-parallel attention cells map -> model
+    "seq_kv": None,          # decode KV-cache time dim (tuner-controlled)
+    "vocab": "model",
+    # parameters
+    "embed": ("pod", "data"),    # FSDP extent; tuner maps None/data/pod_data
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": "model",
+    "expert_cap": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_pdim": None,
+    "ssm_state": None,
+    "conv_dim": None,
+    "layers": None,
+}
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.stack: List[Tuple[Mesh, Dict[str, Any]]] = []
+
+
+_active = _Active()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh,
+                 rules: Optional[Mapping[str, Any]] = None) -> Iterator[None]:
+    """Activate (mesh, rules) for ``shard`` annotations in this scope."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _active.stack.append((mesh, merged))
+    try:
+        yield
+    finally:
+        _active.stack.pop()
+
+
+def current() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return _active.stack[-1] if _active.stack else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = current()
+    return ctx[0] if ctx else None
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Mapping[str, Any], mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec for ``shape`` whose dims carry logical ``axes``.
+
+    Mesh axes are claimed left-to-right at most once; a mapping is applied
+    only when the dimension divides the product of the (present, unclaimed)
+    mesh axes it names.  Trailing replicated dims are trimmed so specs
+    compare equal to their hand-written forms.
+    """
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    entries: List[Any] = []
+    for dim, logical in zip(shape, axes):
+        entry = None
+        if logical is not None:
+            mapped = rules.get(logical)
+            names = (tuple(mapped) if isinstance(mapped, (tuple, list))
+                     else (mapped,) if mapped is not None else ())
+            cand = [m for m in names if m in mesh_sizes and m not in used]
+            if cand:
+                extent = math.prod(mesh_sizes[m] for m in cand)
+                if dim % extent == 0:
+                    used.update(cand)
+                    entry = cand[0] if len(cand) == 1 else tuple(cand)
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; no-op outside a mesh."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh,
+                 rules: Optional[Mapping[str, Any]] = None) -> NamedSharding:
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    return NamedSharding(mesh, spec_for(shape, axes, merged, mesh))

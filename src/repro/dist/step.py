@@ -1,0 +1,90 @@
+"""Step-function factories shared by the trainer, the serving engine and
+the multi-pod dry-run.
+
+Each factory closes over static configuration and returns a pure function
+of arrays, so the same object can be jitted single-device (smoke tests),
+jitted with in/out shardings on a mesh (production / dry-run), or lowered
+at reduced depth for cost measurement.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import (DEFAULT_RUN, RunConfig, decode_step, forward,
+                            loss_fn)
+from ..optim import adamw
+
+
+def make_train_step(cfg, run: RunConfig = DEFAULT_RUN,
+                    opt_cfg: Optional[adamw.OptimConfig] = None,
+                    grad_shardings: Any = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``run.microbatch > 1`` splits the batch on its leading axis and
+    accumulates gradients in ``run.accum_dtype`` (bfloat16 halves the
+    accumulator memory).  ``grad_shardings`` optionally constrains the
+    gradient tree's layout before the optimizer update.
+    """
+    opt_cfg = opt_cfg or adamw.OptimConfig()
+    tm = jax.tree_util.tree_map
+
+    def grads_of(params, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p, b: loss_fn(cfg, p, b, run), has_aux=True)
+        (_, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def step(params, opt, batch):
+        mb = max(1, int(run.microbatch))
+        if mb == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            acc_dt = jnp.dtype(run.accum_dtype)
+            split = lambda t: t.reshape((mb, t.shape[0] // mb) + t.shape[1:])
+            chunks = tm(split, batch)
+            grads = metrics = None
+            for i in range(mb):          # unrolled: mb is static and small
+                one = tm(lambda t: t[i], chunks)
+                g, m = grads_of(params, one)
+                g = tm(lambda a: a.astype(acc_dt), g)
+                grads = g if grads is None else tm(jnp.add, grads, g)
+                metrics = m if metrics is None else tm(jnp.add, metrics, m)
+            grads = tm(lambda a: (a / mb).astype(jnp.float32), grads)
+            metrics = tm(lambda a: a / mb, metrics)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt, params)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return step
+
+
+def make_prefill_step(cfg, run: RunConfig = DEFAULT_RUN):
+    """(params, batch) -> logits (B, S, V); the cache-less prompt pass."""
+
+    def step(params, batch):
+        logits, _ = forward(cfg, params, batch, run)
+        return logits
+
+    return step
+
+
+def make_serve_step(cfg, run: RunConfig = DEFAULT_RUN, greedy: bool = False):
+    """(params, cache, tokens, pos) -> (next, cache) for one decode step.
+
+    ``greedy=True`` returns argmax token ids (B,) int32; otherwise the raw
+    logits (B, V) so samplers can be applied outside the jitted step.
+    """
+
+    def step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(cfg, params, cache, tokens, pos, run)
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+        return logits, new_cache
+
+    return step

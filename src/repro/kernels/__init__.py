@@ -4,8 +4,10 @@
   conv2d/     2D convolution (paper section V)
   attention/  flash attention (beyond paper; same tuning methodology)
 
-Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper + tuned-config lookup) and ref.py (pure-jnp oracle).
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (a
+``@tunable`` declaration + public op resolving configs via
+``repro.core.registry.lookup``) and ref.py (pure-jnp oracle).  Importing
+this package registers all three kernels in the tunable registry.
 """
 
 from . import attention, conv2d, matmul

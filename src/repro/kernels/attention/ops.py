@@ -1,4 +1,4 @@
-"""Batched/multi-head wrapper + tuner integration for flash attention."""
+"""Batched/multi-head wrapper + tunable declaration for flash attention."""
 
 from __future__ import annotations
 
@@ -8,14 +8,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core import TPUAnalyticalEvaluator, Tuner, default_cache
+from ...core import SearchSpace, Tuner, TuningCache
 from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
 from .flash import (DEFAULT_CONFIG, analytical_time, make_flash_attention,
                     vmem_footprint)
 from .ref import attention_reference
 
 KERNEL_NAME = "flash_attention"
+
+
+def _shape(Sq: int, Sk: int, D: int, causal: bool = True) -> Dict[str, Any]:
+    return {"Sq": Sq, "Sk": Sk, "D": D, "causal": bool(causal)}
 
 
 def shape_key(Sq: int, Sk: int, D: int, causal: bool = True) -> str:
@@ -32,29 +37,6 @@ def heuristic_config(Sq: int, Sk: int) -> Dict[str, Any]:
             "BLOCK_K": pick(Sk, (1024, 512, 256, 128, 64))}
 
 
-def lookup_config(Sq: int, Sk: int, D: int, causal: bool = True,
-                  profile: DeviceProfile = TPU_V5E) -> Dict[str, Any]:
-    entry = default_cache().get(KERNEL_NAME, shape_key(Sq, Sk, D, causal),
-                                profile.name)
-    return dict(entry.config) if entry else heuristic_config(Sq, Sk)
-
-
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True,
-                    config: Optional[Dict[str, Any]] = None,
-                    profile: DeviceProfile = TPU_V5E,
-                    interpret: bool = False):
-    """q: (..., Sq, D), k/v: (..., Sk, D); leading dims vmapped."""
-    *lead, Sq, D = q.shape
-    Sk = k.shape[-2]
-    cfg = config or lookup_config(Sq, Sk, D, causal, profile)
-    fn = make_flash_attention(Sq, Sk, D, cfg, causal=causal,
-                              dtype=q.dtype, interpret=interpret)
-    for _ in lead:
-        fn = jax.vmap(fn)
-    return fn(q, k, v)
-
-
 def tuning_space():
     params = {
         "BLOCK_Q": (64, 128, 256, 512, 1024),
@@ -64,47 +46,100 @@ def tuning_space():
     return params, []
 
 
+def _space(shape: Shape) -> SearchSpace:
+    Sq, Sk = shape["Sq"], shape["Sk"]
+    params, constraints = tuning_space()
+    sp = SearchSpace()
+    for name, values in params.items():
+        sp.add_parameter(name=name, values=values)
+    for fn, names, label in constraints:
+        sp.add_constraint(fn, names, label)
+    sp.add_constraint(lambda bq: Sq % bq == 0, ("BLOCK_Q",), "Sq % BLOCK_Q")
+    sp.add_constraint(lambda bk: Sk % bk == 0, ("BLOCK_K",), "Sk % BLOCK_K")
+    return sp
+
+
+def _make_args(shape: Shape, rng: np.random.Generator):
+    Sq, Sk, D = shape["Sq"], shape["Sk"], shape["D"]
+    mk = lambda s: jnp.asarray(rng.normal(size=s) * 0.5, jnp.float32)
+    return mk((Sq, D)), mk((Sk, D)), mk((Sk, D))
+
+
+def _arg_specs(shape: Shape):
+    Sq, Sk, D = shape["Sq"], shape["Sk"], shape["D"]
+    f32 = jnp.float32
+    return (jax.ShapeDtypeStruct((Sq, D), f32),
+            jax.ShapeDtypeStruct((Sk, D), f32),
+            jax.ShapeDtypeStruct((Sk, D), f32))
+
+
+@tunable(
+    name=KERNEL_NAME,
+    space=_space,
+    heuristic=lambda s: heuristic_config(s["Sq"], s["Sk"]),
+    shape_key=lambda s: shape_key(s["Sq"], s["Sk"], s["D"],
+                                  s.get("causal", True)),
+    make_args=_make_args,
+    arg_specs=_arg_specs,
+    analytical_model=lambda s, cfg, prof: analytical_time(
+        cfg, prof, s["Sq"], s["Sk"], s["D"],
+        causal=s.get("causal", True)),
+    vmem_footprint=lambda s, cfg: vmem_footprint(cfg, s["D"]),
+    reference=lambda s: (lambda q, k, v: attention_reference(
+        q, k, v, causal=s.get("causal", True))),
+    default_shapes=(_shape(4096, 4096, 128, causal=True),),
+    defaults={"strategy": "annealing", "budget": 40},
+    tags=("beyond-paper", "attention"))
+def FLASH_ATTENTION(shape: Shape, config: Config, *, interpret: bool = False):
+    """Flash attention (beyond paper; same tuning methodology)."""
+    return make_flash_attention(shape["Sq"], shape["Sk"], shape["D"], config,
+                                causal=shape.get("causal", True),
+                                interpret=interpret)
+
+
+def lookup_config(Sq: int, Sk: int, D: int, causal: bool = True,
+                  profile: DeviceProfile = TPU_V5E,
+                  cache: Optional[TuningCache] = None,
+                  policy: "AutotunePolicy | str | None" = None
+                  ) -> Dict[str, Any]:
+    return lookup(FLASH_ATTENTION, _shape(Sq, Sk, D, causal),
+                  profile=profile, cache=cache, policy=policy)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    config: Optional[Dict[str, Any]] = None,
+                    profile: DeviceProfile = TPU_V5E,
+                    interpret: bool = False,
+                    policy: "AutotunePolicy | str | None" = None):
+    """q: (..., Sq, D), k/v: (..., Sk, D); leading dims vmapped."""
+    *lead, Sq, D = q.shape
+    Sk = k.shape[-2]
+    cfg = config or lookup_config(Sq, Sk, D, causal, profile, policy=policy)
+    fn = make_flash_attention(Sq, Sk, D, cfg, causal=causal,
+                              dtype=q.dtype, interpret=interpret)
+    for _ in lead:
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# legacy tuner integration — thin delegates to the generic API
+# ---------------------------------------------------------------------------
+
 def make_tuner(Sq: int, Sk: int, D: int, *, causal: bool = True,
                evaluator=None, profile: DeviceProfile = TPU_V5E,
                interpret: bool = True) -> Tuner:
-    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
-
-    def build(cfg: Config):
-        return make_flash_attention(Sq, Sk, D, cfg, causal=causal,
-                                    interpret=interpret)
-
-    def make_args(rng: np.random.Generator):
-        mk = lambda s: jnp.asarray(rng.normal(size=s) * 0.5, jnp.float32)
-        return mk((Sq, D)), mk((Sk, D)), mk((Sk, D))
-
-    def arg_specs():
-        f32 = jnp.float32
-        return (jax.ShapeDtypeStruct((Sq, D), f32),
-                jax.ShapeDtypeStruct((Sk, D), f32),
-                jax.ShapeDtypeStruct((Sk, D), f32))
-
-    tuner = Tuner(evaluator=evaluator, profile=profile)
-    tuner.set_reference(
-        lambda q, k, v: attention_reference(q, k, v, causal=causal))
-    tuner.add_kernel(
-        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
-        analytical_model=lambda cfg, prof: analytical_time(
-            cfg, prof, Sq, Sk, D, causal=causal),
-        vmem_footprint=lambda cfg: vmem_footprint(cfg, D),
-        meta={"Sq": Sq, "Sk": Sk, "D": D})
-    params, constraints = tuning_space()
-    for name, values in params.items():
-        tuner.add_parameter(name, values)
-    tuner.add_constraint(lambda bq: Sq % bq == 0, ("BLOCK_Q",), "Sq % BLOCK_Q")
-    tuner.add_constraint(lambda bk: Sk % bk == 0, ("BLOCK_K",), "Sk % BLOCK_K")
-    return tuner
+    return Tuner.from_tunable(FLASH_ATTENTION, _shape(Sq, Sk, D, causal),
+                              evaluator=evaluator, profile=profile,
+                              interpret=interpret)
 
 
 def tune_flash_attention(Sq: int, Sk: int, D: int, *, causal: bool = True,
                          strategy: str = "annealing", budget: int = 40,
                          profile: DeviceProfile = TPU_V5E,
                          record: bool = True, seed: int = 0, **kwargs):
-    tuner = make_tuner(Sq, Sk, D, causal=causal, profile=profile, **kwargs)
-    return tuner.tune(strategy=strategy, budget=budget, seed=seed,
-                      record_to_cache=record,
-                      shape_key=shape_key(Sq, Sk, D, causal))
+    from ...tune.api import tune_kernel
+    return tune_kernel(FLASH_ATTENTION, _shape(Sq, Sk, D, causal),
+                       strategy=strategy, budget=budget, profile=profile,
+                       record=record, seed=seed, **kwargs)

@@ -1,12 +1,12 @@
 from .conv2d import (DEFAULT_CONFIG, analytical_time, make_conv2d,
                      validate_config, vmem_footprint)
-from .ops import (conv2d, heuristic_config, lookup_config, make_tuner,
-                  shape_key, tune_conv2d, tuning_space)
+from .ops import (CONV2D, conv2d, heuristic_config, lookup_config,
+                  make_tuner, shape_key, tune_conv2d, tuning_space)
 from .ref import conv2d_reference, conv_bytes, conv_flops
 
 __all__ = [
-    "DEFAULT_CONFIG", "analytical_time", "make_conv2d", "validate_config",
-    "vmem_footprint", "conv2d", "heuristic_config", "lookup_config",
-    "make_tuner", "shape_key", "tune_conv2d", "tuning_space",
-    "conv2d_reference", "conv_bytes", "conv_flops",
+    "CONV2D", "DEFAULT_CONFIG", "analytical_time", "make_conv2d",
+    "validate_config", "vmem_footprint", "conv2d", "heuristic_config",
+    "lookup_config", "make_tuner", "shape_key", "tune_conv2d",
+    "tuning_space", "conv2d_reference", "conv_bytes", "conv_flops",
 ]

@@ -1,4 +1,4 @@
-"""jit'd entry point + tuner integration for the conv2d case study."""
+"""Public entry point + tunable declaration for the conv2d case study."""
 
 from __future__ import annotations
 
@@ -8,14 +8,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core import TPUAnalyticalEvaluator, Tuner, TuningCache, default_cache
+from ...core import SearchSpace, Tuner, TuningCache
 from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
 from .conv2d import (DEFAULT_CONFIG, analytical_time, make_conv2d,
                      vmem_footprint)
 from .ref import conv2d_reference
 
 KERNEL_NAME = "conv2d"
+
+
+def _shape(H: int, W: int, Fh: int, Fw: int) -> Dict[str, Any]:
+    return {"H": H, "W": W, "Fh": Fh, "Fw": Fw}
 
 
 def shape_key(H: int, W: int, Fh: int, Fw: int) -> str:
@@ -26,28 +31,6 @@ def heuristic_config(H: int, W: int, Fh: int, Fw: int) -> Dict[str, Any]:
     return {"BLOCK_H": min(16, H), "BLOCK_W": min(256, W),
             "SUB_H": 1, "UNROLL": True, "HALO_MODE": "materialize"}
 
-
-def lookup_config(H: int, W: int, Fh: int, Fw: int,
-                  profile: DeviceProfile = TPU_V5E,
-                  cache: Optional[TuningCache] = None) -> Dict[str, Any]:
-    cache = cache or default_cache()
-    entry = cache.get(KERNEL_NAME, shape_key(H, W, Fh, Fw), profile.name)
-    return dict(entry.config) if entry else heuristic_config(H, W, Fh, Fw)
-
-
-def conv2d(image: jax.Array, filt: jax.Array,
-           config: Optional[Dict[str, Any]] = None, weight: float = 1.0,
-           profile: DeviceProfile = TPU_V5E, interpret: bool = False):
-    H, W = image.shape
-    Fh, Fw = filt.shape
-    cfg = config or lookup_config(H, W, Fh, Fw, profile)
-    return make_conv2d(H, W, Fh, Fw, cfg, weight=weight,
-                       interpret=interpret)(image, filt)
-
-
-# ---------------------------------------------------------------------------
-# tuner integration
-# ---------------------------------------------------------------------------
 
 def tuning_space(extended: bool = False):
     """Conv parameter space (compare paper Table II: 3424 configurations)."""
@@ -76,37 +59,82 @@ def tuning_space(extended: bool = False):
     return params, constraints
 
 
+def _space(shape: Shape, extended: bool = True) -> SearchSpace:
+    params, constraints = tuning_space(extended=extended)
+    sp = SearchSpace()
+    for name, values in params.items():
+        sp.add_parameter(name=name, values=values)
+    for fn, names, label in constraints:
+        sp.add_constraint(fn, names, label)
+    return sp
+
+
+def _make_args(shape: Shape, rng: np.random.Generator):
+    H, W, Fh, Fw = shape["H"], shape["W"], shape["Fh"], shape["Fw"]
+    img = jnp.asarray(rng.normal(size=(H, W)), jnp.float32)
+    flt = jnp.asarray(rng.normal(size=(Fh, Fw)), jnp.float32)
+    return img, flt
+
+
+def _arg_specs(shape: Shape):
+    H, W, Fh, Fw = shape["H"], shape["W"], shape["Fh"], shape["Fw"]
+    return (jax.ShapeDtypeStruct((H, W), jnp.float32),
+            jax.ShapeDtypeStruct((Fh, Fw), jnp.float32))
+
+
+@tunable(
+    name=KERNEL_NAME,
+    space=_space,
+    heuristic=lambda s: heuristic_config(s["H"], s["W"], s["Fh"], s["Fw"]),
+    shape_key=lambda s: shape_key(s["H"], s["W"], s["Fh"], s["Fw"]),
+    make_args=_make_args,
+    arg_specs=_arg_specs,
+    analytical_model=lambda s, cfg, prof: analytical_time(
+        cfg, prof, s["H"], s["W"], s["Fh"], s["Fw"]),
+    vmem_footprint=lambda s, cfg: vmem_footprint(cfg, s["Fh"], s["Fw"]),
+    reference=lambda s: conv2d_reference,
+    default_shapes=(_shape(4096, 4096, 3, 3),),
+    # paper V-B: budget 107 = 1/32 of the 3424-config EXTENDED space, so
+    # registry-driven tuning must search that space too
+    defaults={"strategy": "annealing", "budget": 107, "extended_space": True},
+    tags=("paper-case-study", "conv"))
+def CONV2D(shape: Shape, config: Config, *, interpret: bool = False):
+    """The paper's section V case study: 2D convolution."""
+    return make_conv2d(shape["H"], shape["W"], shape["Fh"], shape["Fw"],
+                       config, interpret=interpret)
+
+
+def lookup_config(H: int, W: int, Fh: int, Fw: int,
+                  profile: DeviceProfile = TPU_V5E,
+                  cache: Optional[TuningCache] = None,
+                  policy: "AutotunePolicy | str | None" = None
+                  ) -> Dict[str, Any]:
+    return lookup(CONV2D, _shape(H, W, Fh, Fw), profile=profile, cache=cache,
+                  policy=policy)
+
+
+def conv2d(image: jax.Array, filt: jax.Array,
+           config: Optional[Dict[str, Any]] = None, weight: float = 1.0,
+           profile: DeviceProfile = TPU_V5E, interpret: bool = False,
+           policy: "AutotunePolicy | str | None" = None):
+    H, W = image.shape
+    Fh, Fw = filt.shape
+    cfg = config or lookup_config(H, W, Fh, Fw, profile, policy=policy)
+    return make_conv2d(H, W, Fh, Fw, cfg, weight=weight,
+                       interpret=interpret)(image, filt)
+
+
+# ---------------------------------------------------------------------------
+# legacy tuner integration — thin delegates to the generic API
+# ---------------------------------------------------------------------------
+
 def make_tuner(H: int, W: int, Fh: int, Fw: int, *, evaluator=None,
                profile: DeviceProfile = TPU_V5E, interpret: bool = True,
                extended_space: bool = True) -> Tuner:
-    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
-
-    def build(cfg: Config):
-        return make_conv2d(H, W, Fh, Fw, cfg, interpret=interpret)
-
-    def make_args(rng: np.random.Generator):
-        img = jnp.asarray(rng.normal(size=(H, W)), jnp.float32)
-        flt = jnp.asarray(rng.normal(size=(Fh, Fw)), jnp.float32)
-        return img, flt
-
-    def arg_specs():
-        return (jax.ShapeDtypeStruct((H, W), jnp.float32),
-                jax.ShapeDtypeStruct((Fh, Fw), jnp.float32))
-
-    tuner = Tuner(evaluator=evaluator, profile=profile)
-    tuner.set_reference(conv2d_reference)
-    tuner.add_kernel(
-        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
-        analytical_model=lambda cfg, prof: analytical_time(
-            cfg, prof, H, W, Fh, Fw),
-        vmem_footprint=lambda cfg: vmem_footprint(cfg, Fh, Fw),
-        meta={"H": H, "W": W, "Fh": Fh, "Fw": Fw})
-    params, constraints = tuning_space(extended=extended_space)
-    for name, values in params.items():
-        tuner.add_parameter(name, values)
-    for fn, names, label in constraints:
-        tuner.add_constraint(fn, names, label)
-    return tuner
+    return Tuner.from_tunable(CONV2D, _shape(H, W, Fh, Fw),
+                              evaluator=evaluator, profile=profile,
+                              interpret=interpret,
+                              extended_space=extended_space)
 
 
 def tune_conv2d(H: int, W: int, Fh: int, Fw: int,
@@ -114,7 +142,8 @@ def tune_conv2d(H: int, W: int, Fh: int, Fw: int,
                 profile: DeviceProfile = TPU_V5E, record: bool = True,
                 seed: int = 0, **kwargs):
     """Paper section V-B used budget=107 (1/32 of its 3424-config space)."""
-    tuner = make_tuner(H, W, Fh, Fw, profile=profile, **kwargs)
-    return tuner.tune(strategy=strategy, budget=budget, seed=seed,
-                      record_to_cache=record,
-                      shape_key=shape_key(H, W, Fh, Fw))
+    from ...tune.api import tune_kernel
+    kwargs.setdefault("extended_space", True)
+    return tune_kernel(CONV2D, _shape(H, W, Fh, Fw), strategy=strategy,
+                       budget=budget, profile=profile, record=record,
+                       seed=seed, **kwargs)

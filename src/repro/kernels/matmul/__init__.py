@@ -1,11 +1,12 @@
 from .matmul import (DEFAULT_CONFIG, analytical_time, make_matmul,
                      validate_config, vmem_footprint)
-from .ops import (heuristic_config, lookup_config, make_tuner, matmul,
+from .ops import (GEMM, heuristic_config, lookup_config, make_tuner, matmul,
                   shape_key, tune_matmul, tuning_space)
 from .ref import gemm_reference
 
 __all__ = [
-    "DEFAULT_CONFIG", "analytical_time", "make_matmul", "validate_config",
-    "vmem_footprint", "heuristic_config", "lookup_config", "make_tuner",
-    "matmul", "shape_key", "tune_matmul", "tuning_space", "gemm_reference",
+    "DEFAULT_CONFIG", "GEMM", "analytical_time", "make_matmul",
+    "validate_config", "vmem_footprint", "heuristic_config", "lookup_config",
+    "make_tuner", "matmul", "shape_key", "tune_matmul", "tuning_space",
+    "gemm_reference",
 ]

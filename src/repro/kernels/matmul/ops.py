@@ -1,28 +1,34 @@
-"""jit'd public entry point for the tuned GEMM.
+"""Public entry point for the tuned GEMM, declared via the tunable registry.
 
-``matmul(a, b)`` consults the tuned-config database (written by the tuner,
-keyed by shape and device profile — CLTune scenario 3) and falls back to a
-heuristic default.  ``tune_matmul`` runs the paper's search on the kernel.
+``GEMM`` is the complete tuning declaration (space, heuristic, models,
+reference) for the shape family; ``matmul(a, b)`` resolves its block
+configuration through ``repro.core.registry.lookup`` — tuned-cache hit,
+then heuristic, with optional tune-on-miss (CLTune scenario 3).  The old
+per-kernel helpers (``make_tuner``/``tune_matmul``/``lookup_config``)
+survive as thin delegates to the generic API.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core import (KernelSpec, TPUAnalyticalEvaluator, Tuner,
-                     TuningCache, WallClockEvaluator, default_cache)
+from ...core import SearchSpace, Tuner, TuningCache
 from ...core.profiles import DeviceProfile, TPU_V5E
+from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
 from . import ref
 from .matmul import (DEFAULT_CONFIG, analytical_time, make_matmul,
                      vmem_footprint)
 
 KERNEL_NAME = "gemm"
+
+
+def _shape(M: int, N: int, K: int, dtype="float32") -> Dict[str, Any]:
+    return {"M": M, "N": N, "K": K, "dtype": jnp.dtype(dtype).name}
 
 
 def shape_key(M: int, N: int, K: int, dtype="float32") -> str:
@@ -44,43 +50,6 @@ def heuristic_config(M: int, N: int, K: int) -> Dict[str, Any]:
         "ACC_DTYPE": "float32", "ACC_IN_OUTPUT": False, "TRANS_A": False,
     }
 
-
-def lookup_config(M: int, N: int, K: int,
-                  profile: DeviceProfile = TPU_V5E,
-                  cache: Optional[TuningCache] = None) -> Dict[str, Any]:
-    cache = cache or default_cache()
-    entry = cache.get(KERNEL_NAME, shape_key(M, N, K), profile.name)
-    if entry is not None:
-        return dict(entry.config)
-    return heuristic_config(M, N, K)
-
-
-def matmul(a: jax.Array, b: jax.Array, config: Optional[Dict[str, Any]] = None,
-           *, alpha: float = 1.0, beta: float = 0.0,
-           c: Optional[jax.Array] = None,
-           profile: DeviceProfile = TPU_V5E, interpret: bool = False):
-    """C = alpha * op(A) @ B (+ beta * C), Pallas-tiled.
-
-    The alpha/beta epilogue runs in XLA (it fuses); the Pallas kernel does
-    the FLOP-heavy product, as in the paper's GEMM.
-    """
-    trans = bool((config or {}).get("TRANS_A", False))
-    M = a.shape[1] if trans else a.shape[0]
-    K = a.shape[0] if trans else a.shape[1]
-    N = b.shape[1]
-    cfg = config or lookup_config(M, N, K, profile)
-    fn = make_matmul(M, N, K, cfg, out_dtype=a.dtype, interpret=interpret)
-    out = fn(a, b)
-    if alpha != 1.0:
-        out = alpha * out
-    if c is not None and beta != 0.0:
-        out = out + beta * c
-    return out
-
-
-# ---------------------------------------------------------------------------
-# tuner integration
-# ---------------------------------------------------------------------------
 
 def tuning_space(extended: bool = False):
     """(values, constraints) for the GEMM space.
@@ -123,48 +92,105 @@ def tuning_space(extended: bool = False):
     return params, constraints
 
 
+def _space(shape: Shape, extended: bool = False) -> SearchSpace:
+    M, N, K = shape["M"], shape["N"], shape["K"]
+    params, constraints = tuning_space(extended=extended)
+    sp = SearchSpace()
+    for name, values in params.items():
+        sp.add_parameter(name=name, values=values)
+    for fn, names, label in constraints:
+        sp.add_constraint(fn, names, label)
+    # problem-size divisibility (device-independent feasibility)
+    sp.add_constraint(lambda bm: M % bm == 0, ("BLOCK_M",), "M % BLOCK_M")
+    sp.add_constraint(lambda bn: N % bn == 0, ("BLOCK_N",), "N % BLOCK_N")
+    sp.add_constraint(lambda bk: K % bk == 0, ("BLOCK_K",), "K % BLOCK_K")
+    return sp
+
+
+def _make_args(shape: Shape, rng: np.random.Generator):
+    M, N, K = shape["M"], shape["N"], shape["K"]
+    a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    return a, b
+
+
+def _arg_specs(shape: Shape):
+    M, N, K = shape["M"], shape["N"], shape["K"]
+    return (jax.ShapeDtypeStruct((M, K), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.float32))
+
+
+@tunable(
+    name=KERNEL_NAME,
+    space=_space,
+    heuristic=lambda s: heuristic_config(s["M"], s["N"], s["K"]),
+    shape_key=lambda s: shape_key(s["M"], s["N"], s["K"],
+                                  s.get("dtype", "float32")),
+    make_args=_make_args,
+    arg_specs=_arg_specs,
+    analytical_model=lambda s, cfg, prof: analytical_time(
+        cfg, prof, s["M"], s["N"], s["K"]),
+    vmem_footprint=lambda s, cfg: vmem_footprint(cfg),
+    reference=lambda s: (lambda a, b: ref.gemm_reference(a, b)),
+    default_shapes=(_shape(2048, 2048, 2048),),
+    defaults={"strategy": "annealing", "budget": 100},
+    tags=("paper-case-study", "gemm"))
+def GEMM(shape: Shape, config: Config, *, interpret: bool = False):
+    """The paper's section VI case study: Pallas-tiled GEMM."""
+    return make_matmul(shape["M"], shape["N"], shape["K"], config,
+                       interpret=interpret)
+
+
+def lookup_config(M: int, N: int, K: int,
+                  profile: DeviceProfile = TPU_V5E,
+                  cache: Optional[TuningCache] = None,
+                  policy: "AutotunePolicy | str | None" = None
+                  ) -> Dict[str, Any]:
+    return lookup(GEMM, _shape(M, N, K), profile=profile, cache=cache,
+                  policy=policy)
+
+
+def matmul(a: jax.Array, b: jax.Array, config: Optional[Dict[str, Any]] = None,
+           *, alpha: float = 1.0, beta: float = 0.0,
+           c: Optional[jax.Array] = None,
+           profile: DeviceProfile = TPU_V5E, interpret: bool = False,
+           policy: "AutotunePolicy | str | None" = None):
+    """C = alpha * op(A) @ B (+ beta * C), Pallas-tiled.
+
+    The alpha/beta epilogue runs in XLA (it fuses); the Pallas kernel does
+    the FLOP-heavy product, as in the paper's GEMM.
+    """
+    trans = bool((config or {}).get("TRANS_A", False))
+    M = a.shape[1] if trans else a.shape[0]
+    K = a.shape[0] if trans else a.shape[1]
+    N = b.shape[1]
+    cfg = config or lookup_config(M, N, K, profile, policy=policy)
+    fn = make_matmul(M, N, K, cfg, out_dtype=a.dtype, interpret=interpret)
+    out = fn(a, b)
+    if alpha != 1.0:
+        out = alpha * out
+    if c is not None and beta != 0.0:
+        out = out + beta * c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# legacy tuner integration — thin delegates to the generic API
+# ---------------------------------------------------------------------------
+
 def make_tuner(M: int, N: int, K: int, *, evaluator=None,
                profile: DeviceProfile = TPU_V5E, interpret: bool = True,
                extended_space: bool = False, seed: int = 0) -> Tuner:
     """A ready-to-run Tuner for this GEMM shape (the paper's case study 2)."""
-    evaluator = evaluator or TPUAnalyticalEvaluator(profile=profile)
-
-    def build(cfg: Config):
-        return make_matmul(M, N, K, cfg, interpret=interpret)
-
-    def make_args(rng: np.random.Generator):
-        a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
-        b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
-        return a, b
-
-    def arg_specs():
-        return (jax.ShapeDtypeStruct((M, K), jnp.float32),
-                jax.ShapeDtypeStruct((K, N), jnp.float32))
-
-    tuner = Tuner(evaluator=evaluator, profile=profile)
-    tuner.set_reference(lambda a, b: ref.gemm_reference(a, b))
-    tuner.add_kernel(
-        build, name=KERNEL_NAME, make_args=make_args, arg_specs=arg_specs,
-        analytical_model=lambda cfg, prof: analytical_time(cfg, prof, M, N, K),
-        vmem_footprint=vmem_footprint,
-        meta={"M": M, "N": N, "K": K})
-    params, constraints = tuning_space(extended=extended_space)
-    for name, values in params.items():
-        tuner.add_parameter(name, values)
-    for fn, names, label in constraints:
-        tuner.add_constraint(fn, names, label)
-    # problem-size divisibility (device-independent feasibility)
-    tuner.add_constraint(lambda bm: M % bm == 0, ("BLOCK_M",), "M % BLOCK_M")
-    tuner.add_constraint(lambda bn: N % bn == 0, ("BLOCK_N",), "N % BLOCK_N")
-    tuner.add_constraint(lambda bk: K % bk == 0, ("BLOCK_K",), "K % BLOCK_K")
-    return tuner
+    return Tuner.from_tunable(GEMM, _shape(M, N, K), evaluator=evaluator,
+                              profile=profile, interpret=interpret,
+                              extended_space=extended_space)
 
 
 def tune_matmul(M: int, N: int, K: int, strategy: str = "annealing",
                 budget: int = 100, profile: DeviceProfile = TPU_V5E,
                 record: bool = True, seed: int = 0, **kwargs):
-    tuner = make_tuner(M, N, K, profile=profile, **kwargs)
-    outcome = tuner.tune(strategy=strategy, budget=budget, seed=seed,
-                         record_to_cache=record,
-                         shape_key=shape_key(M, N, K))
-    return outcome
+    from ...tune.api import tune_kernel
+    return tune_kernel(GEMM, _shape(M, N, K), strategy=strategy,
+                       budget=budget, profile=profile, record=record,
+                       seed=seed, **kwargs)

@@ -1,3 +1,3 @@
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, resolve_kernel_configs
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "resolve_kernel_configs"]

@@ -15,9 +15,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import kernels  # noqa: F401 — populates the tunable registry
+from ..core.profiles import DeviceProfile, TPU_V5E
+from ..core.registry import AutotunePolicy, REGISTRY, lookup
 from ..dist.step import make_serve_step
 from ..models.config import ModelConfig
 from ..models.model import RunConfig, init_cache
+
+
+def resolve_kernel_configs(cfg: ModelConfig, slots: int, max_len: int, *,
+                           profile: DeviceProfile = TPU_V5E,
+                           policy: "AutotunePolicy | str | None" = None
+                           ) -> Dict[str, Dict[str, Any]]:
+    """Kernel configurations this serving shape should run with, resolved
+    through the tunable-kernel registry (tuned cache -> heuristic, with
+    optional tune-on-miss).  Shape-keyed re-tuning is CLTune scenario 3:
+    the best block sizes depend on the serving geometry, so the engine asks
+    the registry instead of hard-coding them.
+    """
+    out: Dict[str, Dict[str, Any]] = {}
+    head_dim = cfg.resolved_head_dim
+    if cfg.num_heads and head_dim and "flash_attention" in REGISTRY:
+        out["flash_attention"] = lookup(
+            "flash_attention",
+            {"Sq": max_len, "Sk": max_len, "D": head_dim, "causal": True},
+            profile=profile, policy=policy)
+    if "gemm" in REGISTRY:
+        # the decode hot loop is (slots, d_model) @ (d_model, vocab)
+        out["gemm"] = lookup(
+            "gemm", {"M": slots, "N": cfg.vocab_size, "K": cfg.d_model},
+            profile=profile, policy=policy)
+    return out
 
 
 @dataclasses.dataclass
@@ -33,13 +61,18 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, run: RunConfig = RunConfig()):
+                 max_len: int = 512, run: RunConfig = RunConfig(),
+                 profile: DeviceProfile = TPU_V5E,
+                 autotune: "AutotunePolicy | str | None" = None):
         if cfg.input_mode != "tokens":
             raise ValueError("ServeEngine drives token models")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        #: registry-resolved kernel configurations for this serving shape
+        self.kernel_configs = resolve_kernel_configs(
+            cfg, slots, max_len, profile=profile, policy=autotune)
         self.cache = init_cache(cfg, slots, max_len)
         self._step = jax.jit(make_serve_step(cfg, run, greedy=True))
         self._slot_req: List[Optional[Request]] = [None] * slots

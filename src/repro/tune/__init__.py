@@ -1,11 +1,33 @@
-"""Tuning integration: kernel autotune DB + distributed-config tuner."""
+"""Tuning integration: generic one-shot API, kernel autotune DB, and the
+distributed-config tuner.
 
-from ..kernels.attention.ops import tune_flash_attention
-from ..kernels.conv2d.ops import tune_conv2d
-from ..kernels.matmul.ops import tune_matmul
+The generic entry points (``tune_kernel``/``TuningSession``) live here;
+per-kernel conveniences (``tune_matmul`` etc.) are kept as lazy re-exports
+for compatibility — they are thin delegates to ``tune_kernel`` now.
+"""
+
+from .api import TuningSession, tune_kernel
 from .sharding_autotune import (CellObjective, build_space,
                                 config_to_run_rules, tune_cell)
 
-__all__ = ["tune_flash_attention", "tune_conv2d", "tune_matmul",
+__all__ = ["TuningSession", "tune_kernel",
            "CellObjective", "build_space", "config_to_run_rules",
-           "tune_cell"]
+           "tune_cell",
+           "tune_flash_attention", "tune_conv2d", "tune_matmul"]
+
+_LEGACY = {
+    "tune_matmul": ("repro.kernels.matmul.ops", "tune_matmul"),
+    "tune_conv2d": ("repro.kernels.conv2d.ops", "tune_conv2d"),
+    "tune_flash_attention": ("repro.kernels.attention.ops",
+                             "tune_flash_attention"),
+}
+
+
+def __getattr__(name):
+    # lazy: kernels import repro.tune.api, so importing them eagerly here
+    # would be circular.
+    if name in _LEGACY:
+        import importlib
+        module, attr = _LEGACY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,177 @@
+"""One-shot tuning API on top of the tunable-kernel registry.
+
+Replaces the per-kernel ``tune_matmul`` / ``tune_conv2d`` /
+``tune_flash_attention`` entry points with two generic ones:
+
+    # tune one kernel for one shape (CLTune's Tune(), shape-keyed)
+    outcome = tune_kernel("gemm", {"M": 2048, "N": 2048, "K": 2048},
+                          strategy="annealing", budget=100)
+
+    # batch-tune every registered kernel for a device profile into ONE cache
+    session = TuningSession(profile=TPU_V5E)
+    outcomes = session.run()
+
+``TuningSession`` is the device bring-up story: point it at a profile,
+let it sweep each kernel's declared ``default_shapes`` (or an explicit
+work-list built with ``add``), and ship the single resulting
+``tuned_configs.json`` with the binary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from ..core.cache import TuningCache, default_cache
+from ..core.evaluators import Evaluator
+from ..core.profiles import DeviceProfile, TPU_V5E
+from ..core.registry import REGISTRY, KernelRegistry, Shape, TunableKernel, resolve
+from ..core.tuner import Tuner, TuningOutcome
+
+log = logging.getLogger("repro.tune")
+
+
+def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
+                strategy: Optional[str] = None,
+                budget: Optional[int] = None,
+                evaluator: Optional[Evaluator] = None,
+                profile: DeviceProfile = TPU_V5E,
+                cache: Optional[TuningCache] = None,
+                record: bool = True,
+                seed: int = 0,
+                interpret: bool = True,
+                extended_space: Optional[bool] = None,
+                **strategy_kwargs) -> TuningOutcome:
+    """Tune one registered kernel for one concrete shape.
+
+    Strategy and budget default to the kernel's declared ``defaults`` and
+    fall back to annealing with the Tuner's clamped 1/32-of-space budget.
+    With ``record=True`` the winner lands in the tuned-config cache under
+    the kernel's ``shape_key``, where :func:`repro.core.registry.lookup`
+    (and hence every public op) finds it.
+    """
+    k = resolve(kernel)
+    shape = dict(shape)
+    strategy = strategy or k.defaults.get("strategy", "annealing")
+    if budget is None:
+        budget = k.defaults.get("budget")
+    if extended_space is None:
+        # kernels whose declared budget assumes the paper-scale space opt in
+        extended_space = bool(k.defaults.get("extended_space", False))
+    tuner = Tuner.from_tunable(k, shape, evaluator=evaluator, profile=profile,
+                               cache=cache, interpret=interpret,
+                               extended_space=extended_space)
+    return tuner.tune(strategy=strategy, budget=budget, seed=seed,
+                      record_to_cache=record, shape_key=k.key_for(shape),
+                      **strategy_kwargs)
+
+
+@dataclasses.dataclass
+class _WorkItem:
+    kernel: TunableKernel
+    shape: Dict[str, Any]
+    overrides: Dict[str, Any]
+
+    @property
+    def key(self) -> str:
+        return f"{self.kernel.name}:{self.kernel.key_for(self.shape)}"
+
+
+class TuningSession:
+    """Batch-tune many (kernel, shape) pairs into one shared cache.
+
+    The multi-kernel analogue of a CLTune run: queue work with :meth:`add`
+    (or let :meth:`run` default to every registered kernel's declared
+    ``default_shapes``), then one :meth:`run` call searches each space and
+    writes a single cache file the runtime consults afterwards.
+    """
+
+    def __init__(self, profile: DeviceProfile = TPU_V5E, *,
+                 cache: Optional[TuningCache] = None,
+                 strategy: Optional[str] = None,
+                 budget: Optional[int] = None,
+                 seed: int = 0,
+                 interpret: bool = True,
+                 extended_space: Optional[bool] = None,
+                 registry: KernelRegistry = REGISTRY,
+                 evaluator_factory=None):
+        self.profile = profile
+        self.cache = cache if cache is not None else default_cache()
+        self.strategy = strategy
+        self.budget = budget
+        self.seed = seed
+        self.interpret = interpret
+        self.extended_space = extended_space
+        self.registry = registry
+        #: (kernel, shape, profile) -> Evaluator; None = per-kernel default
+        self.evaluator_factory = evaluator_factory
+        self._items: List[_WorkItem] = []
+        self.outcomes: Dict[str, TuningOutcome] = {}
+
+    # -- work-list construction ------------------------------------------------
+    def add(self, kernel: "TunableKernel | str",
+            shape: Optional[Shape] = None, **overrides) -> "TuningSession":
+        """Queue one kernel; without ``shape``, its declared default shapes."""
+        k = resolve(kernel, self.registry)
+        shapes = [dict(shape)] if shape is not None \
+            else [dict(s) for s in k.default_shapes]
+        if not shapes:
+            raise ValueError(f"kernel {k.name!r} declares no default_shapes; "
+                             "pass an explicit shape")
+        for s in shapes:
+            self._items.append(_WorkItem(k, s, dict(overrides)))
+        return self
+
+    def add_all(self, names: Optional[Sequence[str]] = None) -> "TuningSession":
+        """Queue every registered kernel that declares default shapes."""
+        for name in (names or self.registry.names()):
+            k = self.registry.get(name)
+            if not k.default_shapes:
+                log.info("session: skipping %r (no default_shapes)", name)
+                continue
+            self.add(k)
+        return self
+
+    # -- execution ---------------------------------------------------------------
+    def run(self, save: bool = True) -> Dict[str, TuningOutcome]:
+        """Tune every queued item (queueing all registered kernels if the
+        work-list is empty), record winners, write the cache once."""
+        if not self._items:
+            self.add_all()
+        if not self._items:
+            raise ValueError("nothing to tune: no queued items and no "
+                             "registered kernel declares default_shapes")
+        for item in self._items:
+            k, shape = item.kernel, item.shape
+            kw: Dict[str, Any] = dict(
+                strategy=self.strategy, budget=self.budget, seed=self.seed,
+                interpret=self.interpret, extended_space=self.extended_space)
+            kw.update(item.overrides)
+            if "evaluator" not in kw and self.evaluator_factory is not None:
+                kw["evaluator"] = self.evaluator_factory(k, shape, self.profile)
+            outcome = tune_kernel(k, shape, profile=self.profile,
+                                  cache=self.cache, record=False, **kw)
+            self.outcomes[item.key] = outcome
+            best = outcome.result.best
+            if best is not None:
+                self.cache.record(k.name, k.key_for(shape), self.profile.name,
+                                  best.config, best.time,
+                                  outcome.result.strategy,
+                                  outcome.result.evaluations)
+            log.info("session: %s -> %s", item.key,
+                     "no feasible config" if best is None
+                     else f"{best.time * 1e6:.1f} us {best.config}")
+        if save:
+            self.cache.save()
+        return dict(self.outcomes)
+
+    def report(self) -> str:
+        lines = [f"== tuning session: {len(self.outcomes)} kernel-shapes, "
+                 f"profile={self.profile.name}, cache={self.cache.path} =="]
+        for key, outcome in self.outcomes.items():
+            best = outcome.result.best
+            desc = ("no feasible config" if best is None
+                    else f"{best.time * 1e6:9.2f} us  {best.config}")
+            lines.append(f"  {key}: {desc}")
+        return "\n".join(lines)

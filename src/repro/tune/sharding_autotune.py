@@ -22,7 +22,9 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import SearchSpace, Parameter, make_strategy
+from ..core.evaluators import TPUAnalyticalEvaluator
 from ..core.profiles import DeviceProfile, TPU_V5E
+from ..core.registry import Shape, tunable
 from ..models.config import SHAPES
 from ..models.model import RunConfig
 
@@ -161,27 +163,104 @@ class CellObjective:
         return score
 
 
+# ---------------------------------------------------------------------------
+# registry integration: the distributed-config space of one cell is itself a
+# tunable "kernel" — same declaration API, same cache, same lookup path as
+# the Pallas kernels, so serving/launch can resolve a cell's best sharding
+# config with registry.lookup("sharding_cell", ...).
+# ---------------------------------------------------------------------------
+
+#: sensible starting point per knob, filtered by each cell's actual space
+_CELL_PREFERRED: Dict[str, Any] = {
+    "REMAT": "none", "MICROBATCH": 1, "CE_CHUNK": 0,
+    "ACCUM_DTYPE": "float32", "ATTN_CHUNK": 0, "ATTN_MODE": "grouped",
+    "SEQ_ATTN": None, "FSDP": "pod_data", "SEQ_KV": "model",
+    "MOE_IMPL": "scatter",
+}
+
+#: memoised CellObjective per cell, so repeated lookups share one eval log
+_cell_objectives: Dict[Tuple[str, str, bool], CellObjective] = {}
+
+
+def _cell_heads_divisible(shape: Shape) -> bool:
+    hd = shape.get("heads_divisible")
+    if hd is not None:
+        return bool(hd)
+    from ..configs import get_arch
+    cfg = get_arch(shape["arch"]).full
+    return bool(cfg.num_heads) and cfg.num_heads % 16 == 0
+
+
+def _cell_space(shape: Shape) -> SearchSpace:
+    from ..configs import get_arch
+    cfg = get_arch(shape["arch"]).full
+    return build_space(shape["arch"], shape["shape"],
+                       _cell_heads_divisible(shape), is_moe=cfg.is_moe)
+
+
+def _cell_heuristic(shape: Shape) -> Dict[str, Any]:
+    return {name: _CELL_PREFERRED[name] for name in _cell_space(shape).names}
+
+
+def cell_objective(shape: Shape) -> CellObjective:
+    key = (shape["arch"], shape["shape"], bool(shape.get("multi_pod")))
+    if key not in _cell_objectives:
+        _cell_objectives[key] = CellObjective(
+            key[0], key[1], multi_pod=key[2])
+    return _cell_objectives[key]
+
+
+@tunable(
+    name="sharding_cell",
+    space=_cell_space,
+    heuristic=_cell_heuristic,
+    shape_key=lambda s: (f"{s['arch']}|{s['shape']}|"
+                         f"{'mp' if s.get('multi_pod') else 'sp'}"),
+    # the roofline objective plays the analytical-model role: dry-run
+    # compile-time cost, no hardware.  profile is baked into the objective.
+    analytical_model=lambda s, cfg, prof: cell_objective(s)(cfg),
+    defaults={"strategy": "greedy", "budget": 16},
+    tags=("distributed", "beyond-paper"))
+def SHARDING_CELL(shape: Shape, config: Dict[str, Any]):
+    """'Building' a cell = translating its config into (RunConfig, rules)."""
+    from ..launch import dryrun
+    base = dryrun.default_run_config(shape["arch"], shape["shape"])
+
+    def apply():
+        return config_to_run_rules(config, base)
+    return apply
+
+
 def tune_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
               strategy: str = "greedy", budget: int = 16, seed: int = 0,
               out_path: Optional[str] = None,
-              heads_divisible: Optional[bool] = None):
-    """Run the paper's search over one cell's distributed-config space."""
-    from ..configs import get_arch
-    cfg = get_arch(arch_id).full
-    if heads_divisible is None:
-        heads_divisible = bool(cfg.num_heads) and cfg.num_heads % 16 == 0
-    space = build_space(arch_id, shape_name, heads_divisible,
-                        is_moe=cfg.is_moe)
-    objective = CellObjective(arch_id, shape_name, multi_pod=multi_pod)
-    strat = make_strategy(strategy)
-    result = strat.run(space, objective, budget=budget, seed=seed)
+              heads_divisible: Optional[bool] = None,
+              record: bool = True):
+    """Run the paper's search over one cell's distributed-config space.
+
+    Routed through the generic registry API: the search runs via
+    ``tune_kernel("sharding_cell", ...)`` with a noise-free analytical
+    evaluator wrapping the roofline objective, and the winner is recorded
+    in the same TuningCache the Pallas kernels use.
+    """
+    from .api import tune_kernel
+    shape = {"arch": arch_id, "shape": shape_name, "multi_pod": multi_pod}
+    if heads_divisible is not None:
+        shape["heads_divisible"] = heads_divisible
+    objective = cell_objective(shape)
+    log_start = len(objective.log)      # the objective is memoized; only
+    outcome = tune_kernel(              # this run's evaluations belong here
+        SHARDING_CELL, shape, strategy=strategy, budget=budget, seed=seed,
+        record=record,
+        evaluator=TPUAnalyticalEvaluator(profile=objective.profile,
+                                         noise_sigma=0.0))
     summary = {
         "arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
-        "strategy": strategy, "budget": budget,
-        "best_config": result.best_config,
-        "best_step_t": result.best_time,
-        "evaluations": result.evaluations,
-        "log": objective.log,
+        "strategy": strategy, "budget": outcome.budget,
+        "best_config": outcome.result.best_config,
+        "best_step_t": outcome.result.best_time,
+        "evaluations": outcome.result.evaluations,
+        "log": objective.log[log_start:],
     }
     if out_path:
         os.makedirs(os.path.dirname(out_path), exist_ok=True)

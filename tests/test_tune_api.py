@@ -1,0 +1,113 @@
+"""One-shot tune_kernel + multi-kernel TuningSession over the registry."""
+
+import json
+
+import pytest
+
+from repro.core import REGISTRY, TuningCache, TPU_V5E, TPU_V3
+from repro.kernels.attention.ops import FLASH_ATTENTION
+from repro.kernels.conv2d.ops import CONV2D
+from repro.kernels.matmul.ops import GEMM
+from repro.tune import TuningSession, tune_kernel
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return TuningCache(str(tmp_path / "tuned.json"))
+
+
+GEMM_SHAPE = {"M": 512, "N": 512, "K": 512}
+
+
+def test_tune_kernel_one_shot_records(cache):
+    out = tune_kernel("gemm", GEMM_SHAPE, strategy="random", budget=12,
+                      cache=cache, seed=0)
+    assert out.kernel == "gemm"
+    assert out.best_config is not None
+    assert out.result.evaluations <= 12
+    entry = cache.get("gemm", GEMM.key_for(GEMM_SHAPE), TPU_V5E.name)
+    assert entry is not None
+    assert entry.config == out.best_config
+
+
+def test_tune_kernel_accepts_object_and_defaults(cache):
+    # kernel-declared defaults: annealing with the declared budget
+    out = tune_kernel(GEMM, GEMM_SHAPE, cache=cache, record=False, budget=8)
+    assert out.result.strategy == "annealing"
+    assert out.budget == 8
+
+
+def test_conv2d_registry_tuning_uses_declared_extended_space(cache):
+    # conv2d's declared budget (107) assumes the paper-scale space, so the
+    # registry-driven path must search it too (PAD_W only exists there)
+    out = tune_kernel(CONV2D, {"H": 256, "W": 256, "Fh": 3, "Fw": 3},
+                      strategy="random", budget=4, record=False, cache=cache)
+    assert all("PAD_W" in t.config for t in out.result.trials)
+
+
+def test_tuned_config_feeds_public_op(cache, monkeypatch):
+    from repro.core.cache import _ENV_VAR
+    monkeypatch.setenv(_ENV_VAR, cache.path)
+    tune_kernel("gemm", GEMM_SHAPE, strategy="random", budget=8, cache=cache)
+    cache.save()
+    from repro.kernels.matmul import lookup_config
+    cfg = lookup_config(512, 512, 512)
+    entry = cache.get("gemm", GEMM.key_for(GEMM_SHAPE), TPU_V5E.name)
+    assert cfg == entry.config
+
+
+def test_session_batch_tunes_multiple_kernels(cache):
+    session = TuningSession(cache=cache, strategy="random", budget=6, seed=1)
+    session.add(GEMM, GEMM_SHAPE)
+    session.add(CONV2D, {"H": 256, "W": 256, "Fh": 3, "Fw": 3})
+    session.add("flash_attention", {"Sq": 512, "Sk": 512, "D": 64,
+                                    "causal": True})
+    outcomes = session.run()
+    assert len(outcomes) == 3
+    kernels_in_cache = {key.split("|")[0] for key in cache.entries()}
+    assert kernels_in_cache == {"gemm", "conv2d", "flash_attention"}
+    # one cache file was written, loadable cold
+    reloaded = TuningCache(cache.path).load()
+    assert len(reloaded) == 3
+    report = session.report()
+    for name in ("gemm", "conv2d", "flash_attention"):
+        assert name in report
+
+
+def test_session_defaults_to_registered_default_shapes(cache):
+    session = TuningSession(cache=cache, strategy="random", budget=4)
+    session.add("gemm")                      # no shape -> default_shapes
+    outcomes = session.run(save=False)
+    key = f"gemm:{GEMM.key_for(GEMM.default_shapes[0])}"
+    assert key in outcomes
+
+
+def test_session_per_profile_caches_are_keyed(cache):
+    s3 = TuningSession(profile=TPU_V3, cache=cache, strategy="random",
+                       budget=4)
+    s3.add(GEMM, GEMM_SHAPE)
+    s3.run(save=False)
+    s5 = TuningSession(profile=TPU_V5E, cache=cache, strategy="random",
+                       budget=4)
+    s5.add(GEMM, GEMM_SHAPE)
+    s5.run(save=False)
+    profiles = {key.split("|")[2] for key in cache.entries()}
+    assert profiles == {TPU_V3.name, TPU_V5E.name}
+
+
+def test_session_nothing_to_tune_raises():
+    empty_registry_session = TuningSession(
+        cache=TuningCache("/tmp/unused-cache.json"))
+    # a work item for a kernel with no default shapes must be explicit
+    with pytest.raises(ValueError):
+        empty_registry_session.add("sharding_cell")
+
+
+def test_legacy_tune_wrappers_delegate(cache, monkeypatch):
+    from repro.core.cache import _ENV_VAR
+    monkeypatch.setenv(_ENV_VAR, cache.path)
+    from repro.tune import tune_matmul
+    out = tune_matmul(256, 256, 256, strategy="random", budget=4,
+                      record=False)
+    assert out.kernel == "gemm"
+    assert out.budget == 4
