@@ -1,0 +1,6 @@
+"""repro.bench — benchmark sections with machine-readable results.
+
+Run everything:      python -m benchmarks.run
+Subset:              REPRO_BENCH_ONLY=gemm,engine python -m benchmarks.run
+Diff two runs:       python benchmarks/compare.py baseline.json current.json
+"""

@@ -11,7 +11,7 @@ import math
 from typing import Dict
 
 from repro.configs import PAPER_BUDGETS, PAPER_CONV
-from repro.core import (PROFILES, TPU_V3, TPU_V5E, TPUAnalyticalEvaluator,
+from repro.core import (PROFILES, TPU_V5E, TPUAnalyticalEvaluator,
                         make_strategy)
 from repro.kernels.conv2d import conv_flops, make_tuner
 
@@ -110,7 +110,10 @@ def table2_best_parameters() -> Dict:
                     "config": out.best_config, "time_us": out.best_time * 1e6,
                     "gflops": gf}
                 emit(f"table2/{pname}/{fh}x{fw}", out.best_time * 1e6,
-                     f"GFLOPS={gf:.0f} cfg={out.best_config}")
+                     f"GFLOPS={gf:.0f} cfg={out.best_config}",
+                     config=out.best_config,
+                     evaluations=out.result.evaluations,
+                     engine=out.engine_stats)
     save_json("table2_conv_best", table)
     emit("table2_total", tm.dt * 1e6, "")
     return table

@@ -98,7 +98,10 @@ def table4_best_per_device() -> Dict:
             emit(f"table4/{pname}", out.best_time * 1e6,
                  f"GFLOPS={gflops:.0f} "
                  f"pct_peak={table[pname]['pct_peak']:.1%} "
-                 f"cfg={out.best_config}")
+                 f"cfg={out.best_config}",
+                 config=out.best_config,
+                 evaluations=out.result.evaluations,
+                 engine=out.engine_stats)
     configs = [tuple(sorted(v["config"].items())) for v in table.values()]
     emit("table4_distinct_best_configs", 0.0,
          f"{len(set(configs))}/{len(configs)} devices have distinct optima")
@@ -125,7 +128,7 @@ def table4_cross_device_transfer(table=None) -> None:
 def fig9_vs_baseline() -> None:
     """Fig. 9: tuned GEMM vs the untuned default config (the library-
     baseline analogue) and vs the device roofline ceiling."""
-    from repro.kernels.matmul import DEFAULT_CONFIG, heuristic_config
+    from repro.kernels.matmul import heuristic_config
     rows = {}
     for pname in ALL_PROFILES:
         profile = PROFILES[pname]

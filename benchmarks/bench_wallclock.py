@@ -20,7 +20,7 @@ from repro.models import init_model
 from repro.models.model import RunConfig
 from repro.optim import adamw
 
-from .common import Timer, emit
+from .common import emit
 
 
 def _time(fn, *args, repeats=3):

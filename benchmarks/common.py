@@ -1,10 +1,23 @@
-"""Shared benchmark utilities."""
+"""repro.bench shared layer: structured records + CSV output contract.
+
+Every benchmark section emits :class:`Record` rows through :func:`emit`.
+The legacy ``name,us_per_call,derived`` CSV line is still printed (the
+human-readable stream), but the records are also collected per section so
+``benchmarks.run`` can write machine-readable ``BENCH_<section>.json``
+artifacts — the files CI uploads and ``benchmarks/compare.py`` gates on.
+
+Env knobs:
+  REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
+  REPRO_BENCH_OUT    output directory for BENCH_*.json + auxiliary JSON
+"""
 
 from __future__ import annotations
 
+import dataclasses
+import json
 import os
 import time
-from typing import Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -13,10 +26,69 @@ import numpy as np
 RUNS = int(os.environ.get("REPRO_BENCH_RUNS", "16"))
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
+#: bumped whenever the BENCH_*.json layout changes incompatibly
+SCHEMA_VERSION = 1
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    """Benchmark output contract: ``name,us_per_call,derived`` CSV."""
-    print(f"{name},{us_per_call:.3f},{derived}")
+
+@dataclasses.dataclass
+class Record:
+    """One benchmark measurement row (the machine-readable contract)."""
+
+    name: str
+    us_per_call: float
+    derived: str = ""
+    status: str = "ok"                       # "ok" | "error"
+    #: winning configuration, for tuning benchmarks
+    config: Optional[Dict[str, Any]] = None
+    #: number of search evaluations behind this row
+    evaluations: Optional[int] = None
+    #: EvaluationEngine stats dict (compile_calls, memo_hits, pruned, ...)
+    engine: Optional[Dict[str, Any]] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        d = {"name": self.name, "us_per_call": round(self.us_per_call, 3),
+             "derived": self.derived, "status": self.status}
+        if self.config is not None:
+            d["config"] = {k: str(v) if not isinstance(v, (int, float, bool))
+                           else v for k, v in self.config.items()}
+        if self.evaluations is not None:
+            d["evaluations"] = int(self.evaluations)
+        if self.engine is not None:
+            d["engine"] = self.engine
+        return d
+
+
+#: records of the section currently being collected (None = no collection)
+_records: Optional[List[Record]] = None
+
+
+def begin_section() -> None:
+    """Start collecting emitted records (called by ``benchmarks.run``)."""
+    global _records
+    _records = []
+
+
+def end_section() -> List[Record]:
+    """Stop collecting; return the section's records."""
+    global _records
+    out, _records = (_records or []), None
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         status: str = "ok",
+         config: Optional[Dict[str, Any]] = None,
+         evaluations: Optional[int] = None,
+         engine: Optional[Dict[str, Any]] = None) -> Record:
+    """Benchmark output contract: CSV line + structured record."""
+    rec = Record(name=name, us_per_call=float(us_per_call), derived=derived,
+                 status=status, config=config, evaluations=evaluations,
+                 engine=engine)
+    if _records is not None:
+        _records.append(rec)
+    suffix = derived if status == "ok" else f"ERROR:{derived}"
+    print(f"{name},{us_per_call:.3f},{suffix}")
+    return rec
 
 
 def summarize(values: List[float]) -> Dict[str, float]:
@@ -27,7 +99,6 @@ def summarize(values: List[float]) -> Dict[str, float]:
 
 
 def save_json(name: str, payload) -> str:
-    import json
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:

@@ -1,0 +1,175 @@
+"""Diff two BENCH_all.json result files; gate CI on regressions.
+
+Usage:
+    python benchmarks/compare.py baseline.json current.json \
+        [--threshold 0.5] [--min-us 50] [--schema-only]
+
+Exit codes (CI wires them to different severities):
+  0  no regression
+  1  timing regression: a comparable record slowed down by more than
+     ``--threshold`` (relative) — CI treats this as advisory
+     (``continue-on-error``) because shared-runner timing is noisy
+  2  hard failure: malformed schema, a section missing from the current
+     results, or a section/record with status "error" — CI fails on this
+
+Only records present in both files with status "ok" and a nonzero
+``us_per_call`` at least ``--min-us`` in the baseline are compared;
+derived-only rows (us_per_call == 0) carry no timing signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+try:                                    # imported as benchmarks.compare
+    from .common import SCHEMA_VERSION
+except ImportError:                     # run as a script from benchmarks/
+    from common import SCHEMA_VERSION
+
+OK, REGRESSION, HARD_FAIL = 0, 1, 2
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def validate(doc: Any, label: str) -> List[str]:
+    """Structural schema check; returns a list of problems (empty = valid)."""
+    problems = []
+    if not isinstance(doc, dict):
+        return [f"{label}: top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"{label}: schema_version "
+                        f"{doc.get('schema_version')!r} != {SCHEMA_VERSION}")
+    sections = doc.get("sections")
+    if not isinstance(sections, dict) or not sections:
+        return problems + [f"{label}: missing/empty 'sections' object"]
+    for name, sec in sections.items():
+        if not isinstance(sec, dict):
+            problems.append(f"{label}: section {name!r} is not an object")
+            continue
+        for field in ("status", "records"):
+            if field not in sec:
+                problems.append(f"{label}: section {name!r} lacks {field!r}")
+        for rec in sec.get("records", []):
+            if not isinstance(rec, dict) or "name" not in rec \
+                    or "us_per_call" not in rec:
+                problems.append(f"{label}: malformed record in {name!r}")
+                break
+    return problems
+
+
+def section_errors(doc: Dict[str, Any], label: str) -> List[str]:
+    out = []
+    for name, sec in doc.get("sections", {}).items():
+        if sec.get("status") != "ok":
+            out.append(f"{label}: section {name!r} status="
+                       f"{sec.get('status')!r} ({sec.get('error')})")
+        for rec in sec.get("records", []):
+            if rec.get("status", "ok") != "ok":
+                out.append(f"{label}: record {rec.get('name')!r} in "
+                           f"{name!r} has status={rec.get('status')!r}")
+    return out
+
+
+def _timing_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
+    idx = {}
+    for sname, sec in doc.get("sections", {}).items():
+        for rec in sec.get("records", []):
+            if rec.get("status", "ok") == "ok" and rec.get("us_per_call", 0) > 0:
+                idx[(sname, rec["name"])] = float(rec["us_per_call"])
+    return idx
+
+
+def compare(base: Dict[str, Any], cur: Dict[str, Any],
+            threshold: float, min_us: float) -> Tuple[int, List[str]]:
+    """Return (exit_code, messages) for a baseline-vs-current diff."""
+    messages: List[str] = []
+    missing = [s for s in base.get("sections", {})
+               if s not in cur.get("sections", {})]
+    if missing:
+        return HARD_FAIL, [f"sections missing from current results: "
+                           f"{', '.join(sorted(missing))}"]
+    errors = section_errors(cur, "current")
+    if errors:
+        return HARD_FAIL, errors
+
+    base_idx = _timing_index(base)
+    cur_idx = _timing_index(cur)
+    regressions = []
+    missing = [key for key in base_idx if key not in cur_idx]
+    if missing:
+        # coverage loss is a regression, not a silent shrink of N: refresh
+        # the baseline if records were renamed/removed intentionally
+        regressions.append(
+            f"{len(missing)} baseline record(s) missing from current "
+            f"results: " + ", ".join(f"{s}/{n}"
+                                     for s, n in sorted(missing)[:8]))
+    for key, base_us in sorted(base_idx.items()):
+        if base_us < min_us or key not in cur_idx:
+            continue
+        cur_us = cur_idx[key]
+        rel = cur_us / base_us - 1.0
+        if rel > threshold:
+            regressions.append(
+                f"{key[0]}/{key[1]}: {base_us:.1f}us -> {cur_us:.1f}us "
+                f"(+{rel:.0%} > +{threshold:.0%})")
+        messages.append(f"  {key[0]}/{key[1]}: {base_us:.1f}us -> "
+                        f"{cur_us:.1f}us ({rel:+.0%})")
+    if regressions:
+        return REGRESSION, ["REGRESSIONS:"] + regressions
+    compared = sum(1 for k, v in base_idx.items()
+                   if v >= min_us and k in cur_idx)
+    messages.append(f"OK: {compared} timing records within +{threshold:.0%}")
+    return OK, messages
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.5,
+                    help="relative slowdown that counts as a regression "
+                         "(default 0.5 = +50%%)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore baseline records faster than this "
+                         "(timing noise floor, default 50us)")
+    ap.add_argument("--schema-only", action="store_true",
+                    help="validate structure + statuses only; never "
+                         "report timing regressions")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    try:
+        base, cur = load(args.baseline), load(args.current)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare: cannot load results: {e}", file=sys.stderr)
+        return HARD_FAIL
+    problems = validate(base, "baseline") + validate(cur, "current")
+    if problems:
+        for p in problems:
+            print(f"compare: {p}", file=sys.stderr)
+        return HARD_FAIL
+    if args.schema_only:
+        errors = section_errors(cur, "current")
+        if errors:
+            for e in errors:
+                print(f"compare: {e}", file=sys.stderr)
+            return HARD_FAIL
+        print(f"compare: schema OK "
+              f"({len(cur.get('sections', {}))} sections)")
+        return OK
+
+    code, messages = compare(base, cur, args.threshold, args.min_us)
+    if not args.quiet or code != OK:
+        for m in messages:
+            print(m, file=sys.stderr if code else sys.stdout)
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Dict, Optional, Set, Tuple
+from typing import Any, Dict, Set
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,11 @@ Public API surface (the CLTune analogue):
 """
 
 from .cache import CacheEntry, TuningCache, default_cache
+from .engine import EngineConfig, EngineStats, EvaluationEngine
 from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
                          Measurement, TPUAnalyticalEvaluator,
-                         WallClockEvaluator, make_evaluator)
+                         WallClockEvaluator, make_evaluator,
+                         median_prune_loop)
 from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
@@ -19,27 +21,31 @@ from .registry import (REGISTRY, AutotunePolicy, KernelRegistry,
                        TunableKernel, default_policy, lookup, resolve,
                        tunable)
 from .space import Config, Constraint, Parameter, SearchSpace
-from .strategies import (Evolutionary, FullSearch,
+from .strategies import (AskTellDriver, Evolutionary, FullSearch,
                          GreedyCoordinateDescent, ParticleSwarm,
-                         RandomSearch, SearchResult, SimulatedAnnealing,
-                         Strategy, Trial, available_strategies,
-                         make_strategy, register_strategy)
+                         RandomSearch, SearchResult, SequentialAskTell,
+                         SimulatedAnnealing, Strategy, Trial,
+                         available_strategies, make_strategy,
+                         register_strategy)
 from .tuner import Tuner, TuningOutcome
 from .verify import VerificationError, assert_trees_close, trees_close
 
 __all__ = [
     "CacheEntry", "TuningCache", "default_cache",
+    "EngineConfig", "EngineStats", "EvaluationEngine",
     "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
     "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
+    "median_prune_loop",
     "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",
     "REGISTRY", "AutotunePolicy", "KernelRegistry", "TunableKernel",
     "default_policy", "lookup", "resolve", "tunable",
     "Config", "Constraint", "Parameter", "SearchSpace",
-    "Evolutionary", "FullSearch", "GreedyCoordinateDescent",
-    "ParticleSwarm", "RandomSearch",
-    "SearchResult", "SimulatedAnnealing", "Strategy", "Trial",
+    "AskTellDriver", "Evolutionary", "FullSearch",
+    "GreedyCoordinateDescent", "ParticleSwarm", "RandomSearch",
+    "SearchResult", "SequentialAskTell", "SimulatedAnnealing",
+    "Strategy", "Trial",
     "available_strategies", "make_strategy", "register_strategy",
     "Tuner", "TuningOutcome",
     "VerificationError", "assert_trees_close", "trees_close",

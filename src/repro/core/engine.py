@@ -1,0 +1,259 @@
+"""Parallel evaluation engine: batch, overlap, deduplicate, prune.
+
+CLTune evaluates one configuration at a time: compile, run, repeat — so
+wall-clock cost, not strategy quality, bounds the search-space sizes the
+paper can explore.  This engine decouples the two halves of an evaluation:
+
+* **compilation** (``Evaluator.prepare``) is embarrassingly parallel and
+  runs on a worker pool, overlapped across a whole batch of candidates;
+* **measurement** (``Evaluator.measure``) stays strictly serialized, so
+  timing samples never contend with each other or with compilation of
+  *other* candidates' artifacts only — never the measured one.
+
+Candidates arrive in batches through the strategies' ask/tell drivers
+(:mod:`repro.core.strategies`): generation-based strategies (PSO,
+evolutionary, random, full) yield whole populations per ask, while
+inherently sequential walks (simulated annealing, greedy descent) run
+through a thread-bridged fallback one config per ask — optionally with
+*speculative* neighbour prefetch, which warms the compile pool with the
+configurations the walk is most likely to ask next.
+
+Two further throughput levers:
+
+* a per-run **memo** keyed on the canonical config key answers repeat
+  configurations without recompiling or remeasuring (populations revisit
+  their global best constantly);
+* **early-stop pruning** hands the measurement phase a threshold of
+  ``prune_factor × incumbent``; once a candidate's running median exceeds
+  it, the remaining repeats are aborted (the candidate already lost).
+  The incumbent itself can never be pruned: anything at least as fast
+  keeps its running median below the threshold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+from .evaluators import Evaluator, KernelSpec, Measurement
+from .space import Config, SearchSpace
+from .strategies import SearchResult, Strategy
+
+
+def _default_workers() -> int:
+    """Compile-pool width that leaves headroom for the measurement thread.
+
+    Wall-clock timing samples run while the pool compiles *other*
+    candidates; on small CI runners that contention would distort
+    medians, so the default reserves two cores for measurement and never
+    exceeds four compile threads (2-core runner -> 1, i.e. fully serial).
+    """
+    return max(1, min(4, (os.cpu_count() or 2) - 2))
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Knobs for one EvaluationEngine run."""
+
+    #: compile-pool width; 1 disables the pool (fully serial compiles);
+    #: None = auto (min(4, cores - 2), clamped to >= 1)
+    workers: Optional[int] = None
+    #: use the strategies' native batched drivers; False forces the
+    #: sequential fallback for every strategy (debug / equivalence runs)
+    batching: bool = True
+    #: early-stop threshold factor k (prune once running median exceeds
+    #: k × incumbent); None disables pruning
+    prune_factor: Optional[float] = None
+    #: for batch-of-1 strategies, pre-compile up to this many neighbours
+    #: of the asked config while its measurement runs; 0 disables
+    speculate: int = 0
+
+    def __post_init__(self):
+        if self.workers is None:
+            self.workers = _default_workers()
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        if self.prune_factor is not None and self.prune_factor < 1.0:
+            raise ValueError("prune_factor must be >= 1 (or None)")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Observability record for one engine run (serialized into results)."""
+
+    evaluations: int = 0            # configs told back to the strategy
+    unique_configs: int = 0         # distinct configs actually evaluated
+    memo_hits: int = 0              # evaluations answered from the memo
+    compile_calls: int = 0          # prepare() calls (incl. speculative)
+    speculative_compiles: int = 0
+    speculative_hits: int = 0       # speculated artifacts later consumed
+    pruned: int = 0                 # measurements aborted by early stop
+    batches: int = 0
+    max_batch: int = 0
+    compile_total_s: float = 0.0    # sum of per-config compile durations
+    compile_wait_s: float = 0.0     # wall time the serial loop blocked on
+                                    # compile futures
+    measure_total_s: float = 0.0
+    wall_s: float = 0.0
+
+    @property
+    def compile_overlap_ratio(self) -> float:
+        """Fraction of total compile seconds hidden behind other work.
+
+        0.0 = fully serial (every compile second was waited for);
+        approaching 1.0 = compilation fully overlapped with measurement
+        and other compiles.
+        """
+        if self.compile_total_s <= 0:
+            return 0.0
+        hidden = max(0.0, self.compile_total_s - self.compile_wait_s)
+        return hidden / self.compile_total_s
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["compile_overlap_ratio"] = round(self.compile_overlap_ratio, 4)
+        for k in ("compile_total_s", "compile_wait_s", "measure_total_s",
+                  "wall_s"):
+            d[k] = round(d[k], 6)
+        return d
+
+
+class EvaluationEngine:
+    """Batched, overlapped, memoised, pruning evaluation of one kernel.
+
+    Usage (what ``Tuner.tune`` does internally)::
+
+        engine = EvaluationEngine(evaluator, spec, space, EngineConfig())
+        result = engine.run(make_strategy("pso"), budget=200, seed=0)
+        result.extra["engine"]          # EngineStats dict
+        engine.measurements             # config_key -> Measurement
+    """
+
+    def __init__(self, evaluator: Evaluator, spec: KernelSpec,
+                 space: SearchSpace,
+                 config: Optional[EngineConfig] = None):
+        self.evaluator = evaluator
+        self.spec = spec
+        self.space = space
+        self.config = config or EngineConfig()
+        #: per-run memo: canonical config key -> Measurement
+        self.measurements: Dict[Tuple, Measurement] = {}
+        self.stats = EngineStats()
+
+    # -- internals -----------------------------------------------------------
+    def _timed_prepare(self, config: Config) -> Tuple[Any, float]:
+        t0 = time.perf_counter()
+        prepared = self.evaluator.prepare(self.spec, config)
+        return prepared, time.perf_counter() - t0
+
+    def _submit(self, pool: Optional[ThreadPoolExecutor],
+                config: Config) -> "Future":
+        self.stats.compile_calls += 1
+        if pool is None:
+            # inline compile blocks the serial loop: all of it is wait time
+            fut: Future = Future()
+            try:
+                result = self._timed_prepare(config)
+                self.stats.compile_wait_s += result[1]
+                fut.set_result(result)
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+            return fut
+        return pool.submit(self._timed_prepare, config)
+
+    def _speculate(self, pool: Optional[ThreadPoolExecutor],
+                   config: Config,
+                   in_flight: Dict[Tuple, Future],
+                   speculative: set) -> None:
+        """Warm the pool with likely-next configs (neighbours of ``config``)."""
+        budget = self.config.speculate
+        if budget <= 0 or pool is None:
+            return
+        for nbr in self.space.neighbours(config):
+            if budget <= 0:
+                break
+            key = self.space.config_key(nbr)
+            if key in self.measurements or key in in_flight:
+                continue
+            in_flight[key] = self._submit(pool, nbr)
+            speculative.add(key)
+            self.stats.speculative_compiles += 1
+            budget -= 1
+
+    # -- the run loop --------------------------------------------------------
+    def run(self, strategy: Strategy, budget: Optional[int],
+            seed: int = 0) -> SearchResult:
+        cfg = self.config
+        t_run0 = time.perf_counter()
+        if cfg.batching:
+            driver = strategy.asktell(self.space, budget, seed=seed)
+        else:   # force the sequential fallback regardless of strategy type
+            driver = Strategy.asktell(strategy, self.space, budget, seed=seed)
+        pool = (ThreadPoolExecutor(max_workers=cfg.workers,
+                                   thread_name_prefix="engine-compile")
+                if cfg.workers > 1 else None)
+        in_flight: Dict[Tuple, Future] = {}
+        speculative: set = set()
+        incumbent = math.inf
+        try:
+            while True:
+                batch = driver.ask()
+                if not batch:
+                    break
+                self.stats.batches += 1
+                self.stats.max_batch = max(self.stats.max_batch, len(batch))
+                keys = [self.space.config_key(c) for c in batch]
+                # 1. launch compiles for every fresh config in the batch
+                for config, key in zip(batch, keys):
+                    if key in self.measurements or key in in_flight:
+                        continue
+                    in_flight[key] = self._submit(pool, config)
+                # 2. speculative prefetch for sequential (batch-of-1) walks
+                if len(batch) == 1 and keys[0] not in self.measurements:
+                    self._speculate(pool, batch[0], in_flight, speculative)
+                # 3. serialized measurement, memo-first, in batch order
+                results = []
+                for config, key in zip(batch, keys):
+                    if key in self.measurements:
+                        m = self.measurements[key]
+                        self.stats.memo_hits += 1
+                    else:
+                        if key in speculative:
+                            speculative.discard(key)
+                            self.stats.speculative_hits += 1
+                        t_wait0 = time.perf_counter()
+                        prepared, compile_s = in_flight.pop(key).result()
+                        self.stats.compile_wait_s += (time.perf_counter()
+                                                      - t_wait0)
+                        self.stats.compile_total_s += compile_s
+                        threshold = None
+                        if (cfg.prune_factor is not None
+                                and math.isfinite(incumbent)):
+                            threshold = cfg.prune_factor * incumbent
+                        t_meas0 = time.perf_counter()
+                        m = self.evaluator.measure(
+                            self.spec, config, prepared,
+                            prune_threshold_s=threshold)
+                        self.stats.measure_total_s += (time.perf_counter()
+                                                       - t_meas0)
+                        self.measurements[key] = m
+                        self.stats.unique_configs += 1
+                        if m.pruned:
+                            self.stats.pruned += 1
+                    self.stats.evaluations += 1
+                    if m.ok and m.time_s < incumbent:
+                        incumbent = m.time_s
+                    results.append((config, m.time_s))
+                driver.tell(results)
+            result = driver.result()
+        finally:
+            driver.close()
+            if pool is not None:
+                pool.shutdown(wait=False, cancel_futures=True)
+        self.stats.wall_s = time.perf_counter() - t_run0
+        result.extra["engine"] = self.stats.as_dict()
+        return result

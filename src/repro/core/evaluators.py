@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -73,13 +73,67 @@ class Measurement:
     error: str = ""
     detail: Dict[str, float] = dataclasses.field(default_factory=dict)
 
+    @property
+    def pruned(self) -> bool:
+        """True when the measurement was aborted by early-stop pruning."""
+        return bool(self.detail.get("pruned", False))
+
+
+def median_prune_loop(sample: Callable[[], float], repeats: int,
+                      prune_threshold_s: Optional[float] = None,
+                      min_samples: int = 1) -> Tuple[List[float], bool]:
+    """Collect up to ``repeats`` timing samples with early-stop pruning.
+
+    After each sample the running median is compared against
+    ``prune_threshold_s`` (typically ``k × incumbent``); once it exceeds
+    the threshold the loop aborts.  Returns ``(samples, pruned)``.  A
+    configuration whose samples stay below the threshold can never be
+    pruned, so the incumbent — or anything better — survives; real
+    timing is noisy, though, so ``min_samples`` guards against a single
+    outlier sample aborting a genuinely fast configuration (wall-clock
+    measurement passes 2: pruning only ever triggers on a median of at
+    least two samples).
+    """
+    samples: List[float] = []
+    for _ in range(max(1, repeats)):
+        samples.append(float(sample()))
+        if (prune_threshold_s is not None
+                and len(samples) >= max(1, min_samples)
+                and len(samples) < repeats
+                and float(np.median(samples)) > prune_threshold_s):
+            return samples, True
+    return samples, False
+
 
 class Evaluator:
-    """Interface: evaluate(spec, config) -> Measurement."""
+    """Interface: evaluate(spec, config) -> Measurement.
+
+    Evaluation optionally splits into two phases for the parallel engine:
+
+    * ``prepare(spec, config)`` — the compilation phase.  Must be safe to
+      run concurrently from a worker pool; returns an opaque artifact (or
+      a failed :class:`Measurement`).  The default does nothing.
+    * ``measure(spec, config, prepared, prune_threshold_s)`` — the timing
+      phase, always serialized by the engine so measurements never
+      contend.  ``prune_threshold_s`` enables early-stop pruning where
+      the backend supports it.
+
+    ``evaluate`` remains the one-call path and is definitionally
+    ``measure(spec, config, prepare(spec, config))``.
+    """
 
     name = "base"
 
     def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
+        return self.measure(spec, config, self.prepare(spec, config))
+
+    def prepare(self, spec: KernelSpec, config: Config) -> Any:
+        """Concurrent compile phase; default: nothing to prepare."""
+        return None
+
+    def measure(self, spec: KernelSpec, config: Config,
+                prepared: Any = None,
+                prune_threshold_s: Optional[float] = None) -> Measurement:
         raise NotImplementedError
 
     def objective(self, spec: KernelSpec) -> Callable[[Config], float]:
@@ -94,8 +148,25 @@ def _failed(err: Exception | str, compile_s: float = 0.0) -> Measurement:
                        error=str(err)[:500])
 
 
+@dataclasses.dataclass
+class _CompiledKernel:
+    """Artifact of WallClockEvaluator.prepare: jitted fn, args, first output."""
+
+    fn: Callable
+    args: Tuple
+    out: Any
+    compile_s: float
+
+
 class WallClockEvaluator(Evaluator):
-    """Median-of-N wall-clock timing of the jitted kernel (CLTune's method)."""
+    """Median-of-N wall-clock timing of the jitted kernel (CLTune's method).
+
+    ``prepare`` performs the expensive part — building and jit-compiling
+    the kernel plus the first (compiling) call — and is safe to run from
+    the engine's worker pool; ``measure`` verifies and times serially,
+    optionally aborting early once the running median exceeds the prune
+    threshold.
+    """
 
     name = "wallclock"
 
@@ -108,7 +179,7 @@ class WallClockEvaluator(Evaluator):
         self.seed = seed
         self.atol, self.rtol = atol, rtol
 
-    def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
+    def prepare(self, spec: KernelSpec, config: Config):
         if spec.make_args is None:
             return _failed("WallClockEvaluator requires spec.make_args")
         rng = np.random.default_rng(self.seed)
@@ -121,6 +192,17 @@ class WallClockEvaluator(Evaluator):
             compile_s = time.perf_counter() - t0
         except Exception as e:  # noqa: BLE001 — any build/compile error = failed config
             return _failed(e)
+        return _CompiledKernel(fn=fn, args=args, out=out, compile_s=compile_s)
+
+    def measure(self, spec: KernelSpec, config: Config,
+                prepared=None,
+                prune_threshold_s: Optional[float] = None) -> Measurement:
+        if prepared is None:
+            prepared = self.prepare(spec, config)
+        if isinstance(prepared, Measurement):   # prepare already failed
+            return prepared
+        fn, args, out = prepared.fn, prepared.args, prepared.out
+        compile_s = prepared.compile_s
 
         verified: Optional[bool] = None
         if self.verify_outputs and spec.reference is not None:
@@ -135,18 +217,25 @@ class WallClockEvaluator(Evaluator):
         try:
             for _ in range(max(0, self.warmup - 1)):
                 jax.block_until_ready(fn(*args))
-            samples = []
-            for _ in range(self.repeats):
+
+            def _sample() -> float:
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(*args))
-                samples.append(time.perf_counter() - t0)
+                return time.perf_counter() - t0
+
+            samples, pruned = median_prune_loop(
+                _sample, self.repeats, prune_threshold_s=prune_threshold_s,
+                min_samples=2)
             t = float(np.median(samples))
         except Exception as e:  # noqa: BLE001
             return _failed(e, compile_s)
+        detail = {"min_s": float(np.min(samples)),
+                  "max_s": float(np.max(samples)),
+                  "samples": float(len(samples))}
+        if pruned:
+            detail["pruned"] = True
         return Measurement(time_s=t, ok=True, verified=verified,
-                           compile_s=compile_s,
-                           detail={"min_s": float(np.min(samples)),
-                                   "max_s": float(np.max(samples))})
+                           compile_s=compile_s, detail=detail)
 
 
 class CostModelEvaluator(Evaluator):
@@ -166,7 +255,8 @@ class CostModelEvaluator(Evaluator):
         self.chips = chips
         self.include_collectives = include_collectives
 
-    def analyze(self, spec: KernelSpec, config: Config) -> Measurement:
+    def prepare(self, spec: KernelSpec, config: Config):
+        """Lower + compile + extract costs (the parallelizable phase)."""
         if spec.arg_specs is None:
             return _failed("CostModelEvaluator requires spec.arg_specs")
         try:
@@ -180,8 +270,6 @@ class CostModelEvaluator(Evaluator):
                 cost = cost[0] if cost else {}
         except Exception as e:  # noqa: BLE001
             return _failed(e)
-        flops = float(cost.get("flops", 0.0))
-        bytes_ = float(cost.get("bytes accessed", 0.0))
         coll = 0.0
         if self.include_collectives:
             try:
@@ -189,20 +277,33 @@ class CostModelEvaluator(Evaluator):
                 coll = stats.weighted_bytes
             except Exception:   # text unavailable on some backends
                 coll = 0.0
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes": coll, "compile_s": compile_s}
+
+    def measure(self, spec: KernelSpec, config: Config,
+                prepared=None,
+                prune_threshold_s: Optional[float] = None) -> Measurement:
+        if prepared is None:
+            prepared = self.prepare(spec, config)
+        if isinstance(prepared, Measurement):
+            return prepared
+        flops, bytes_ = prepared["flops"], prepared["bytes"]
+        coll = prepared["collective_bytes"]
         p = self.profile
         compute_t = flops / (self.chips * p.peak_flops)
         memory_t = bytes_ / (self.chips * p.hbm_bw)
         coll_t = coll / (self.chips * p.ici_links * p.ici_bw)
         t = max(compute_t, memory_t) + coll_t + p.launch_overhead
         return Measurement(
-            time_s=t, ok=True, compile_s=compile_s,
+            time_s=t, ok=True, compile_s=prepared["compile_s"],
             detail={"flops": flops, "bytes": bytes_,
                     "collective_bytes": coll,
                     "compute_t": compute_t, "memory_t": memory_t,
                     "collective_t": coll_t})
 
-    def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
-        return self.analyze(spec, config)
+    def analyze(self, spec: KernelSpec, config: Config) -> Measurement:
+        return self.evaluate(spec, config)
 
 
 class TPUAnalyticalEvaluator(Evaluator):
@@ -232,7 +333,9 @@ class TPUAnalyticalEvaluator(Evaluator):
         rng = np.random.default_rng(h)
         return float(np.exp(rng.normal(0.0, self.noise_sigma)))
 
-    def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
+    def measure(self, spec: KernelSpec, config: Config,
+                prepared=None,
+                prune_threshold_s: Optional[float] = None) -> Measurement:
         if spec.analytical_model is None:
             return _failed("TPUAnalyticalEvaluator requires spec.analytical_model")
         try:

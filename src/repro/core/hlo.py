@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, List, Tuple
+from typing import Dict, Iterable
 
 # bytes per element for HLO dtypes
 _DTYPE_BYTES: Dict[str, int] = {

@@ -15,8 +15,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import queue
 import random
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .space import Config, SearchSpace
 
@@ -102,13 +104,23 @@ class _Recorder:
 
 
 class Strategy:
-    """Base class; subclasses implement ``run``."""
+    """Base class; subclasses implement ``run``.
+
+    ``asktell`` is the batch interface consumed by
+    :class:`repro.core.engine.EvaluationEngine`: generation-based
+    strategies override it with native batched drivers, everything else
+    inherits a sequential fallback that wraps ``run`` unchanged.
+    """
 
     name = "base"
 
     def run(self, space: SearchSpace, objective: Objective,
             budget: int, seed: int = 0) -> SearchResult:
         raise NotImplementedError
+
+    def asktell(self, space: SearchSpace, budget: Optional[int],
+                seed: int = 0) -> "AskTellDriver":
+        return SequentialAskTell(self, space, budget, seed=seed)
 
 
 class FullSearch(Strategy):
@@ -124,6 +136,9 @@ class FullSearch(Strategy):
             rec.evaluate(cfg)
         return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
 
+    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
+        return _FullSearchAskTell(self, space, budget)
+
 
 class RandomSearch(Strategy):
     """Uniform sampling of a configurable fraction of the space."""
@@ -136,6 +151,9 @@ class RandomSearch(Strategy):
         for cfg in space.sample_unique(rng, budget):
             rec.evaluate(cfg)
         return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
+
+    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
+        return _RandomSearchAskTell(self, space, budget, seed=seed)
 
 
 class SimulatedAnnealing(Strategy):
@@ -270,6 +288,9 @@ class ParticleSwarm(Strategy):
                             extra={"particle_traces": particle_traces,
                                    "swarm_size": n})
 
+    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
+        return _ParticleSwarmAskTell(self, space, budget, seed=seed)
+
 
 class GreedyCoordinateDescent(Strategy):
     """Beyond-paper: cycle through parameters, greedily taking the best value
@@ -364,6 +385,322 @@ class Evolutionary(Strategy):
         return SearchResult(self.name, rec.trials, rec.best,
                             rec.evaluations,
                             extra={"population": self.population})
+
+    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
+        return _EvolutionaryAskTell(self, space, budget, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Batch ask/tell drivers — the EvaluationEngine's view of a strategy
+# ---------------------------------------------------------------------------
+
+class AskTellDriver:
+    """Inverted-control interface over one search run.
+
+    The evaluation engine pulls *batches* of candidate configurations with
+    ``ask()`` (an empty batch means the search finished), evaluates them
+    however it likes — parallel compilation, memoisation, early-stop
+    pruning — and reports objective values back with ``tell()``.
+    ``result()`` is valid once ``ask()`` has returned an empty batch.
+
+    Generation-based strategies (full, random, PSO, evolutionary) provide
+    native drivers whose batches are whole populations; every other
+    strategy inherits :class:`SequentialAskTell`, which runs the
+    strategy's own ``run`` loop unchanged and surfaces its objective
+    calls one configuration at a time.
+    """
+
+    strategy: Strategy
+
+    def ask(self) -> List[Config]:
+        raise NotImplementedError
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        raise NotImplementedError
+
+    def result(self) -> SearchResult:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release resources (idempotent; safe after an aborted search)."""
+
+
+class SequentialAskTell(AskTellDriver):
+    """Bridge ``strategy.run`` into ask/tell via a worker thread.
+
+    The compatibility path: any Strategy subclass — including
+    user-registered ones that only implement ``run`` — works with the
+    engine, one configuration per batch, with trial-for-trial identical
+    results to a direct ``run()`` call (the strategy's own code runs,
+    its objective calls are simply answered from the engine).
+    """
+
+    def __init__(self, strategy: Strategy, space: SearchSpace,
+                 budget: Optional[int], seed: int = 0):
+        self.strategy = strategy
+        self._requests: "queue.Queue[Optional[Config]]" = queue.Queue(1)
+        self._responses: "queue.Queue[float]" = queue.Queue(1)
+        self._result: Optional[SearchResult] = None
+        self._error: Optional[BaseException] = None
+        self._finished = False
+        self._awaiting_tell = False
+
+        def _objective(config: Config) -> float:
+            self._requests.put(dict(config))
+            return self._responses.get()
+
+        def _run() -> None:
+            try:
+                self._result = strategy.run(space, _objective, budget,
+                                            seed=seed)
+            except BaseException as e:  # noqa: BLE001 — surfaced on next ask
+                self._error = e
+            finally:
+                self._requests.put(None)        # sentinel: run() returned
+
+        self._thread = threading.Thread(
+            target=_run, name=f"asktell-{strategy.name}", daemon=True)
+        self._thread.start()
+
+    def ask(self) -> List[Config]:
+        if self._finished:
+            return []
+        if self._awaiting_tell:
+            raise RuntimeError("ask() called with a tell() still pending")
+        config = self._requests.get()
+        if config is None:
+            self._finished = True
+            self._thread.join()
+            if self._error is not None:
+                raise self._error
+            return []
+        self._awaiting_tell = True
+        return [config]
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        if not self._awaiting_tell:
+            raise RuntimeError("tell() without a pending ask()")
+        (_, time_s), = results
+        self._awaiting_tell = False
+        self._responses.put(float(time_s))
+
+    def result(self) -> SearchResult:
+        if not self._finished or self._result is None:
+            raise RuntimeError("result() before the search finished")
+        return self._result
+
+    def close(self) -> None:
+        # Unblock an abandoned strategy thread (engine aborted mid-search):
+        # answer every outstanding objective call with inf until run()
+        # returns.  Bounded because every strategy is budget-bounded.
+        while not self._finished:
+            if self._awaiting_tell:
+                self._awaiting_tell = False
+                self._responses.put(math.inf)
+            nxt = self._requests.get()
+            if nxt is None:
+                self._finished = True
+            else:
+                self._awaiting_tell = True
+
+
+class _BatchRecorder:
+    """Trial log + incumbent for native batched drivers."""
+
+    def __init__(self):
+        self.trials: List[Trial] = []
+        self.best: Optional[Trial] = None
+
+    def add(self, config: Config, time_s: float) -> None:
+        trial = Trial(config=dict(config), time=float(time_s),
+                      index=len(self.trials))
+        self.trials.append(trial)
+        if trial.ok and (self.best is None or trial.time < self.best.time):
+            self.best = trial
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.trials)
+
+
+class _FullSearchAskTell(AskTellDriver):
+    """Exhaustive enumeration in engine-sized chunks."""
+
+    def __init__(self, strategy: FullSearch, space: SearchSpace,
+                 budget: Optional[int], chunk: int = 64):
+        self.strategy = strategy
+        self._iter = iter(space)
+        self._budget = math.inf if budget is None else budget
+        self._chunk = chunk
+        self._rec = _BatchRecorder()
+        self._asked = 0
+
+    def ask(self) -> List[Config]:
+        limit = int(min(self._chunk, self._budget - self._asked))
+        batch: List[Config] = []
+        while len(batch) < limit:
+            try:
+                batch.append(next(self._iter))
+            except StopIteration:
+                break
+        self._asked += len(batch)
+        return batch
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        for cfg, t in results:
+            self._rec.add(cfg, t)
+
+    def result(self) -> SearchResult:
+        return SearchResult(self.strategy.name, self._rec.trials,
+                            self._rec.best, self._rec.evaluations)
+
+
+def _require_budget(strategy: Strategy, budget: Optional[int]) -> int:
+    """Only full search supports budget=None (exhaustive enumeration)."""
+    if budget is None:
+        raise ValueError(f"strategy {strategy.name!r} requires a finite "
+                         "budget (budget=None is full-search only)")
+    return budget
+
+
+class _RandomSearchAskTell(AskTellDriver):
+    """The whole random sample is one batch — maximally overlappable."""
+
+    def __init__(self, strategy: RandomSearch, space: SearchSpace,
+                 budget: int, seed: int = 0):
+        budget = _require_budget(strategy, budget)
+        self.strategy = strategy
+        rng = random.Random(seed)
+        self._pending: List[Config] = space.sample_unique(rng, budget)
+        self._rec = _BatchRecorder()
+
+    def ask(self) -> List[Config]:
+        batch, self._pending = self._pending, []
+        return batch
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        for cfg, t in results:
+            self._rec.add(cfg, t)
+
+    def result(self) -> SearchResult:
+        return SearchResult(self.strategy.name, self._rec.trials,
+                            self._rec.best, self._rec.evaluations)
+
+
+class _ParticleSwarmAskTell(AskTellDriver):
+    """Generation-synchronous PSO: each batch is the whole swarm.
+
+    Within a generation every particle moves against the generation-start
+    global best (classic synchronous PSO), whereas ``ParticleSwarm.run``
+    refreshes the global best particle-by-particle; the two trajectories
+    coincide whenever no particle improves the incumbent mid-round.
+    """
+
+    def __init__(self, strategy: ParticleSwarm, space: SearchSpace,
+                 budget: int, seed: int = 0):
+        self.strategy = strategy
+        self.space = space
+        self.rng = random.Random(seed)
+        self._budget = _require_budget(strategy, budget)
+        self._rec = _BatchRecorder()
+        n = strategy.swarm_size
+        self.xs = [space.sample(self.rng) for _ in range(n)]
+        self.p_best = [dict(x) for x in self.xs]
+        self.p_time = [math.inf] * n
+        self.g_best: Optional[Config] = None
+        self.g_time = math.inf
+        self.traces: List[List[float]] = [[] for _ in range(n)]
+        self._moved_once = False
+        self._asked_idx: List[int] = []
+
+    def ask(self) -> List[Config]:
+        remaining = self._budget - self._rec.evaluations
+        if remaining <= 0:
+            return []
+        if self._moved_once:
+            g = self.g_best if self.g_best is not None else self.xs[0]
+            for i in range(len(self.xs)):
+                self.xs[i] = self.strategy._move(
+                    self.space, self.rng, self.xs[i], self.p_best[i], g)
+        self._moved_once = True
+        self._asked_idx = list(range(int(min(remaining, len(self.xs)))))
+        return [dict(self.xs[i]) for i in self._asked_idx]
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        for i, (cfg, t) in zip(self._asked_idx, results):
+            t = float(t)
+            self._rec.add(cfg, t)
+            self.traces[i].append(t)
+            if t < self.p_time[i]:
+                self.p_best[i], self.p_time[i] = dict(cfg), t
+            if t < self.g_time:
+                self.g_best, self.g_time = dict(cfg), t
+
+    def result(self) -> SearchResult:
+        return SearchResult(self.strategy.name, self._rec.trials,
+                            self._rec.best, self._rec.evaluations,
+                            extra={"particle_traces": self.traces,
+                                   "swarm_size": self.strategy.swarm_size,
+                                   "synchronous": True})
+
+
+class _EvolutionaryAskTell(AskTellDriver):
+    """Generation-batched GA: ask yields the next population's offspring."""
+
+    def __init__(self, strategy: Evolutionary, space: SearchSpace,
+                 budget: int, seed: int = 0):
+        self.strategy = strategy
+        self.space = space
+        self.rng = random.Random(seed)
+        self._budget = _require_budget(strategy, budget)
+        self._rec = _BatchRecorder()
+        self.pop: List[Config] = []
+        self.fit: List[float] = []
+        self._initial = [space.sample(self.rng)
+                         for _ in range(strategy.population)]
+        self._elite: Optional[Tuple[Config, float]] = None
+        self._asked: List[Config] = []
+
+    def _tourney(self) -> Config:
+        idx = min(self.rng.sample(range(len(self.pop)),
+                                  min(self.strategy.tournament,
+                                      len(self.pop))),
+                  key=lambda i: self.fit[i])
+        return self.pop[idx]
+
+    def ask(self) -> List[Config]:
+        remaining = self._budget - self._rec.evaluations
+        if remaining <= 0:
+            return []
+        if self._initial is not None:
+            batch, self._initial = self._initial, None
+        else:
+            elite_i = min(range(len(self.pop)), key=lambda i: self.fit[i])
+            self._elite = (self.pop[elite_i], self.fit[elite_i])
+            batch = [self.strategy._offspring(self.space, self.rng,
+                                              self._tourney(),
+                                              self._tourney())
+                     for _ in range(self.strategy.population - 1)]
+        self._asked = batch[: int(min(remaining, len(batch)))]
+        return [dict(c) for c in self._asked]
+
+    def tell(self, results: List[Tuple[Config, float]]) -> None:
+        told = [(dict(cfg), float(t)) for cfg, t in results]
+        for cfg, t in told:
+            self._rec.add(cfg, t)
+        if self._elite is None:              # initial population
+            self.pop = [c for c, _ in told]
+            self.fit = [t for _, t in told]
+        else:
+            elite, elite_fit = self._elite
+            self.pop = [elite] + [c for c, _ in told]
+            self.fit = [elite_fit] + [t for _, t in told]
+
+    def result(self) -> SearchResult:
+        return SearchResult(self.strategy.name, self._rec.trials,
+                            self._rec.best, self._rec.evaluations,
+                            extra={"population": self.strategy.population,
+                                   "synchronous": True})
 
 
 # ---------------------------------------------------------------------------

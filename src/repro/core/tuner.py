@@ -35,12 +35,10 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import math
-from typing import Any, Callable, Dict, List, Optional, Sequence
-
-import numpy as np
+from typing import Any, Callable, Dict, Optional, Sequence
 
 from .cache import TuningCache, default_cache
+from .engine import EngineConfig, EvaluationEngine
 from .evaluators import (Evaluator, KernelSpec, Measurement,
                          TPUAnalyticalEvaluator, WallClockEvaluator)
 from .profiles import DeviceProfile, TPU_V5E
@@ -62,6 +60,8 @@ class TuningOutcome:
     profile: str
     #: the evaluation budget actually used (None = exhaustive full search)
     budget: Optional[int] = None
+    #: EvaluationEngine observability record (None on engine-less paths)
+    engine_stats: Optional[Dict[str, Any]] = None
 
     @property
     def best_config(self) -> Optional[Config]:
@@ -92,6 +92,14 @@ class TuningOutcome:
             lines.append(f"  #{i + 1}: {t.time * 1e6:9.2f} us  {t.config}")
         if not ok:
             lines.append("  (no feasible configuration found)")
+        if self.engine_stats:
+            s = self.engine_stats
+            lines.append(
+                f"engine: {s.get('compile_calls', 0)} compiles for "
+                f"{s.get('evaluations', 0)} evaluations "
+                f"({s.get('memo_hits', 0)} memo hits, "
+                f"{s.get('pruned', 0)} pruned, "
+                f"overlap={s.get('compile_overlap_ratio', 0.0):.0%})")
         return "\n".join(lines)
 
 
@@ -218,7 +226,12 @@ class Tuner:
              budget: Optional[int] = None, seed: int = 0,
              record_to_cache: bool = False,
              shape_key: str = "",
+             engine: "EngineConfig | Dict[str, Any] | None" = None,
              **strategy_kwargs) -> TuningOutcome:
+        """Search the space; all evaluation flows through the
+        :class:`~repro.core.engine.EvaluationEngine` (``engine`` takes an
+        :class:`EngineConfig` or a kwargs dict for one; default engine =
+        batched drivers + compile pool, no pruning/speculation)."""
         if self._spec is None:
             raise ValueError("no kernel registered; call add_kernel first")
         if self.space.num_dimensions == 0:
@@ -227,15 +240,6 @@ class Tuner:
 
         strat = (strategy if isinstance(strategy, Strategy)
                  else make_strategy(strategy, **strategy_kwargs))
-        measurements: Dict[tuple, Measurement] = {}
-
-        def objective(config: Config) -> float:
-            m = self.evaluator.evaluate(self._spec, config)
-            measurements[self.space.config_key(config)] = m
-            if not m.ok:
-                log.debug("config %s failed: %s", config, m.error)
-            return m.time_s
-
         if strat.name == "full":
             # None = exhaustive; an explicit budget still caps enumeration
             budget = max(1, budget) if budget is not None else None
@@ -246,12 +250,21 @@ class Tuner:
                 # instead of degenerating to a single sample.
                 budget = card if card <= 32 else max(1, card // 32)
             budget = max(1, min(budget, card))  # never exceed the space
-        result = strat.run(self.space, objective, budget, seed=seed)
+
+        if not isinstance(engine, EngineConfig):
+            engine = EngineConfig(**(engine or {}))
+        eng = EvaluationEngine(self.evaluator, self._spec, self.space,
+                               config=engine)
+        result = eng.run(strat, budget, seed=seed)
+        for key, m in eng.measurements.items():
+            if not m.ok:
+                log.debug("config %s failed: %s", key, m.error)
 
         outcome = TuningOutcome(
-            kernel=self._spec.name, result=result, measurements=measurements,
+            kernel=self._spec.name, result=result,
+            measurements=dict(eng.measurements),
             evaluator=self.evaluator.name, profile=self.profile.name,
-            budget=budget)
+            budget=budget, engine_stats=result.extra.get("engine"))
         if record_to_cache and result.best is not None:
             cache = self._cache if self._cache is not None else default_cache()
             cache.record(self._spec.name, shape_key or "default",

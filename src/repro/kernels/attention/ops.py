@@ -12,7 +12,7 @@ from ...core import SearchSpace, Tuner, TuningCache
 from ...core.profiles import DeviceProfile, TPU_V5E
 from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
-from .flash import (DEFAULT_CONFIG, analytical_time, make_flash_attention,
+from .flash import (analytical_time, make_flash_attention,
                     vmem_footprint)
 from .ref import attention_reference
 

@@ -12,7 +12,7 @@ from ...core import SearchSpace, Tuner, TuningCache
 from ...core.profiles import DeviceProfile, TPU_V5E
 from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
-from .conv2d import (DEFAULT_CONFIG, analytical_time, make_conv2d,
+from .conv2d import (analytical_time, make_conv2d,
                      vmem_footprint)
 from .ref import conv2d_reference
 

@@ -21,7 +21,7 @@ from ...core.profiles import DeviceProfile, TPU_V5E
 from ...core.registry import AutotunePolicy, Shape, lookup, tunable
 from ...core.space import Config
 from . import ref
-from .matmul import (DEFAULT_CONFIG, analytical_time, make_matmul,
+from .matmul import (analytical_time, make_matmul,
                      vmem_footprint)
 
 KERNEL_NAME = "gemm"

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import logging
 
-import jax
 
 from repro.configs import get_config
 from repro.data import DataConfig

@@ -8,7 +8,7 @@ context, so the same code runs in CPU smoke tests and 512-chip dry-runs).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

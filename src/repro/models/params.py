@@ -16,7 +16,7 @@ Logical axis vocabulary (mapped to mesh axes by ``repro.dist.sharding``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ the pod (EXPERIMENTS.md discusses the trade-off).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

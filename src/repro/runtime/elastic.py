@@ -10,7 +10,7 @@ the new mesh shape and validates that the run configuration still divides.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 

@@ -16,11 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from ..ckpt import CheckpointManager
 from ..data import DataConfig, TokenSource

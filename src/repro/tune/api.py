@@ -21,9 +21,10 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Dict, List, Mapping, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.cache import TuningCache, default_cache
+from ..core.engine import EngineConfig
 from ..core.evaluators import Evaluator
 from ..core.profiles import DeviceProfile, TPU_V5E
 from ..core.registry import REGISTRY, KernelRegistry, Shape, TunableKernel, resolve
@@ -42,6 +43,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 seed: int = 0,
                 interpret: bool = True,
                 extended_space: Optional[bool] = None,
+                engine: "EngineConfig | Dict[str, Any] | None" = None,
                 **strategy_kwargs) -> TuningOutcome:
     """Tune one registered kernel for one concrete shape.
 
@@ -49,7 +51,11 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     fall back to annealing with the Tuner's clamped 1/32-of-space budget.
     With ``record=True`` the winner lands in the tuned-config cache under
     the kernel's ``shape_key``, where :func:`repro.core.registry.lookup`
-    (and hence every public op) finds it.
+    (and hence every public op) finds it.  ``engine`` configures the
+    parallel evaluation engine (worker-pool width, early-stop pruning,
+    speculative prefetch); the resulting
+    :attr:`~repro.core.tuner.TuningOutcome.engine_stats` records what the
+    engine saved.
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -64,7 +70,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                                extended_space=extended_space)
     return tuner.tune(strategy=strategy, budget=budget, seed=seed,
                       record_to_cache=record, shape_key=k.key_for(shape),
-                      **strategy_kwargs)
+                      engine=engine, **strategy_kwargs)
 
 
 @dataclasses.dataclass
@@ -95,7 +101,8 @@ class TuningSession:
                  interpret: bool = True,
                  extended_space: Optional[bool] = None,
                  registry: KernelRegistry = REGISTRY,
-                 evaluator_factory=None):
+                 evaluator_factory=None,
+                 engine: "EngineConfig | Dict[str, Any] | None" = None):
         self.profile = profile
         self.cache = cache if cache is not None else default_cache()
         self.strategy = strategy
@@ -106,6 +113,8 @@ class TuningSession:
         self.registry = registry
         #: (kernel, shape, profile) -> Evaluator; None = per-kernel default
         self.evaluator_factory = evaluator_factory
+        #: engine configuration shared by every queued item
+        self.engine = engine
         self._items: List[_WorkItem] = []
         self.outcomes: Dict[str, TuningOutcome] = {}
 
@@ -146,7 +155,8 @@ class TuningSession:
             k, shape = item.kernel, item.shape
             kw: Dict[str, Any] = dict(
                 strategy=self.strategy, budget=self.budget, seed=self.seed,
-                interpret=self.interpret, extended_space=self.extended_space)
+                interpret=self.interpret, extended_space=self.extended_space,
+                engine=self.engine)
             kw.update(item.overrides)
             if "evaluator" not in kw and self.evaluator_factory is not None:
                 kw["evaluator"] = self.evaluator_factory(k, shape, self.profile)
@@ -174,4 +184,20 @@ class TuningSession:
             desc = ("no feasible config" if best is None
                     else f"{best.time * 1e6:9.2f} us  {best.config}")
             lines.append(f"  {key}: {desc}")
+        stats = self.engine_stats()
+        if stats["evaluations"]:
+            lines.append(
+                f"  engine totals: {stats['compile_calls']} compiles / "
+                f"{stats['evaluations']} evaluations, "
+                f"{stats['memo_hits']} memo hits, {stats['pruned']} pruned")
         return "\n".join(lines)
+
+    def engine_stats(self) -> Dict[str, int]:
+        """Aggregate engine counters across every tuned item."""
+        totals = {"evaluations": 0, "unique_configs": 0, "memo_hits": 0,
+                  "compile_calls": 0, "pruned": 0}
+        for outcome in self.outcomes.values():
+            s = outcome.engine_stats or {}
+            for key in totals:
+                totals[key] += int(s.get(key, 0))
+        return totals

@@ -21,7 +21,7 @@ import os
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..core import SearchSpace, Parameter, make_strategy
+from ..core import SearchSpace
 from ..core.evaluators import TPUAnalyticalEvaluator
 from ..core.profiles import DeviceProfile, TPU_V5E
 from ..core.registry import Shape, tunable
@@ -235,13 +235,17 @@ def tune_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
               strategy: str = "greedy", budget: int = 16, seed: int = 0,
               out_path: Optional[str] = None,
               heads_divisible: Optional[bool] = None,
-              record: bool = True):
+              record: bool = True,
+              engine: Optional[Dict[str, Any]] = None):
     """Run the paper's search over one cell's distributed-config space.
 
     Routed through the generic registry API: the search runs via
     ``tune_kernel("sharding_cell", ...)`` with a noise-free analytical
     evaluator wrapping the roofline objective, and the winner is recorded
-    in the same TuningCache the Pallas kernels use.
+    in the same TuningCache the Pallas kernels use.  Evaluation flows
+    through the EvaluationEngine; each dry-run compile is expensive, so
+    the per-run dedup memo (revisit = free) matters more than pool width
+    here — ``engine`` overrides the default single-worker configuration.
     """
     from .api import tune_kernel
     shape = {"arch": arch_id, "shape": shape_name, "multi_pod": multi_pod}
@@ -252,6 +256,8 @@ def tune_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     outcome = tune_kernel(              # this run's evaluations belong here
         SHARDING_CELL, shape, strategy=strategy, budget=budget, seed=seed,
         record=record,
+        # dryrun compiles mutate global XLA state: keep compiles serial
+        engine=engine if engine is not None else {"workers": 1},
         evaluator=TPUAnalyticalEvaluator(profile=objective.profile,
                                          noise_sigma=0.0))
     summary = {
@@ -260,6 +266,7 @@ def tune_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         "best_config": outcome.result.best_config,
         "best_step_t": outcome.result.best_time,
         "evaluations": outcome.result.evaluations,
+        "engine_stats": outcome.engine_stats,
         "log": objective.log[log_start:],
     }
     if out_path:

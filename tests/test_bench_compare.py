@@ -1,0 +1,155 @@
+"""benchmarks/compare.py regression gate + run.py status propagation."""
+
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks import compare
+from benchmarks import run as bench_run
+
+
+def rec(name, us, status="ok"):
+    return {"name": name, "us_per_call": us, "derived": "", "status": status}
+
+
+def section(records, status="ok", error=None):
+    return {"schema_version": 1, "section": "s", "status": status,
+            "error": error, "runs": 2, "wall_s": 0.1, "records": records}
+
+
+def doc(**sections):
+    return {"schema_version": 1, "runs": 2, "sections": sections}
+
+
+def write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def run_main(tmp_path, base, cur, *extra):
+    return compare.main([write(tmp_path, "base.json", base),
+                         write(tmp_path, "cur.json", cur), *extra])
+
+
+BASE = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0)]))
+
+
+def test_identical_results_pass(tmp_path):
+    assert run_main(tmp_path, BASE, BASE) == compare.OK
+
+
+def test_improvement_passes(tmp_path):
+    cur = doc(gemm=section([rec("a", 500.0), rec("b", 180.0)]))
+    assert run_main(tmp_path, BASE, cur) == compare.OK
+
+
+def test_regression_detected(tmp_path):
+    cur = doc(gemm=section([rec("a", 1600.0), rec("b", 200.0)]))
+    assert run_main(tmp_path, BASE, cur) == compare.REGRESSION
+
+
+def test_threshold_configurable(tmp_path):
+    cur = doc(gemm=section([rec("a", 1600.0), rec("b", 200.0)]))
+    assert run_main(tmp_path, BASE, cur, "--threshold", "0.7") == compare.OK
+    assert run_main(tmp_path, BASE, cur, "--threshold", "0.2") \
+        == compare.REGRESSION
+
+
+def test_noise_floor_skips_fast_records(tmp_path):
+    base = doc(gemm=section([rec("tiny", 10.0)]))
+    cur = doc(gemm=section([rec("tiny", 100.0)]))     # 10x but below --min-us
+    assert run_main(tmp_path, base, cur) == compare.OK
+    assert run_main(tmp_path, base, cur, "--min-us", "5") \
+        == compare.REGRESSION
+
+
+def test_derived_only_records_ignored(tmp_path):
+    base = doc(gemm=section([rec("stat", 0.0)]))
+    cur = doc(gemm=section([rec("stat", 0.0)]))
+    assert run_main(tmp_path, base, cur) == compare.OK
+
+
+def test_missing_record_is_a_regression(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0)]))    # "b" vanished
+    assert run_main(tmp_path, BASE, cur) == compare.REGRESSION
+
+
+def test_missing_section_hard_fails(tmp_path):
+    cur = doc(other=section([rec("a", 1000.0)]))
+    assert run_main(tmp_path, BASE, cur) == compare.HARD_FAIL
+
+
+def test_new_section_in_current_is_fine(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0)]),
+              extra=section([rec("c", 5.0)]))
+    assert run_main(tmp_path, BASE, cur) == compare.OK
+
+
+def test_error_record_hard_fails(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0),
+                            rec("b", 0.0, status="error")]))
+    assert run_main(tmp_path, BASE, cur) == compare.HARD_FAIL
+
+
+def test_error_section_hard_fails(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0)], status="error", error="boom"))
+    assert run_main(tmp_path, BASE, cur) == compare.HARD_FAIL
+
+
+def test_malformed_schema_hard_fails(tmp_path):
+    assert run_main(tmp_path, BASE, {"sections": {}}) == compare.HARD_FAIL
+    assert run_main(tmp_path, BASE, {"schema_version": 99,
+                                     "sections": {"gemm": section([])}}) \
+        == compare.HARD_FAIL
+    bad = write(tmp_path, "bad.json", BASE)
+    with open(bad, "w") as f:
+        f.write("{not json")
+    assert compare.main([write(tmp_path, "b2.json", BASE), bad]) \
+        == compare.HARD_FAIL
+
+
+def test_schema_only_ignores_regressions_but_not_errors(tmp_path):
+    cur = doc(gemm=section([rec("a", 99000.0), rec("b", 200.0)]))
+    assert run_main(tmp_path, BASE, cur, "--schema-only") == compare.OK
+    cur_err = doc(gemm=section([rec("a", 1.0, status="error")]))
+    assert run_main(tmp_path, BASE, cur_err, "--schema-only") \
+        == compare.HARD_FAIL
+
+
+# -- run.py: per-record status propagation (the stdout-matching bug fix) -----
+
+def test_run_section_propagates_error_records():
+    def fn():
+        common.emit("good", 1.0)
+        common.emit("bad", 0.0, "exploded", status="error")
+    payload = bench_run.run_section("demo", fn)
+    assert payload["status"] == "error"
+    assert "bad" in payload["error"]
+    assert [r["status"] for r in payload["records"]] == ["ok", "error"]
+
+
+def test_run_section_ok_and_exception_paths():
+    payload = bench_run.run_section("demo", lambda: common.emit("g", 1.0))
+    assert payload["status"] == "ok" and payload["error"] is None
+    assert payload["schema_version"] == common.SCHEMA_VERSION
+
+    def boom():
+        common.emit("partial", 1.0)
+        raise RuntimeError("kaput")
+    payload = bench_run.run_section("demo", boom)
+    assert payload["status"] == "error"
+    assert "kaput" in payload["error"]
+    assert len(payload["records"]) == 1    # records before the crash survive
+
+
+def test_emitted_records_roundtrip_fields():
+    common.begin_section()
+    common.emit("tuned", 12.5, "cfg", config={"BM": 128, "dtype": "f32"},
+                evaluations=42, engine={"compile_calls": 7})
+    (r,) = common.end_section()
+    j = r.to_json()
+    assert j["config"] == {"BM": 128, "dtype": "f32"}
+    assert j["evaluations"] == 42
+    assert j["engine"]["compile_calls"] == 7

@@ -1,6 +1,5 @@
 """Tunable-kernel registry: declaration, lookup policies, cache plumbing."""
 
-import math
 
 import pytest
 

@@ -1,16 +1,12 @@
 """Tuner facade: verification, device constraints, cache, evaluators."""
 
 import math
-import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
-from repro.core import (CostModelEvaluator, Measurement, Parameter,
-                        TPUAnalyticalEvaluator, Tuner, TuningCache,
-                        WallClockEvaluator, TPU_V5E, TPU_V3)
+from repro.core import (CostModelEvaluator, TPUAnalyticalEvaluator, Tuner,
+                        TuningCache, WallClockEvaluator, TPU_V5E, TPU_V3)
 from repro.core.evaluators import KernelSpec
 
 N = 1024

@@ -1,7 +1,6 @@
 """Fault tolerance: kill mid-run, restore, and match the uninterrupted run."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

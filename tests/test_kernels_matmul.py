@@ -5,9 +5,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import SearchSpace, Parameter, TPUAnalyticalEvaluator, TPU_V5E, TPU_V3
+from repro.core import SearchSpace, Parameter, TPU_V5E, TPU_V3
 from repro.kernels.matmul import (analytical_time, gemm_reference,
-                                  heuristic_config, make_matmul, make_tuner,
+                                  heuristic_config, make_matmul,
                                   tuning_space, vmem_footprint)
 
 RNG = np.random.default_rng(0)

@@ -1,9 +1,7 @@
 """Substrate: optimizer, data pipeline, checkpointing, runtime."""
 
-import math
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,8 +4,7 @@ import json
 
 import pytest
 
-from repro.core import REGISTRY, TuningCache, TPU_V5E, TPU_V3
-from repro.kernels.attention.ops import FLASH_ATTENTION
+from repro.core import TuningCache, TPU_V5E, TPU_V3
 from repro.kernels.conv2d.ops import CONV2D
 from repro.kernels.matmul.ops import GEMM
 from repro.tune import TuningSession, tune_kernel

@@ -1,6 +1,5 @@
 """Sharding auto-tuner: space construction + config translation."""
 
-import dataclasses
 
 from repro.models.model import RunConfig
 from repro.tune import build_space, config_to_run_rules
