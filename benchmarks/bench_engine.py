@@ -17,9 +17,18 @@ quantifies what the parallel evaluation engine buys on this host:
   measurement runs, hits counted.
 * ``pso200_gemm_analytical`` — the same 200-evaluation PSO through the
   registry path (`tune_kernel`) on the analytical GEMM model.
+* ``failure_isolation`` — a space where a third of the configurations
+  cannot build: the engine must complete the full sweep, recording each
+  failure as an ``inf`` trial (CLTune §III's tolerate-failures contract).
+
+Every engine record carries a ``failures`` dict ({"prepare": n,
+"measure": n}); ``compare.py`` gates on growth there — new failures mean
+the benchmark silently measured fewer configurations than the baseline.
 """
 
 from __future__ import annotations
+
+from typing import Any, Dict
 
 import jax.numpy as jnp
 
@@ -30,6 +39,11 @@ from repro.core import (EngineConfig, EvaluationEngine, KernelSpec,
 from .common import Timer, emit
 
 PROBE_N = 96
+
+
+def _failure_counts(s: Dict[str, Any]) -> Dict[str, int]:
+    return {"prepare": int(s.get("compile_failures", 0)),
+            "measure": int(s.get("measure_failures", 0))}
 
 
 def probe_space() -> SearchSpace:
@@ -79,7 +93,8 @@ def pso200_wallclock() -> None:
           f"engine invariant broken: compile_calls={s['compile_calls']} "
           f">= evaluations={s['evaluations']}"),
          status="ok" if dedup_ok else "error",
-         config=res.best_config, evaluations=res.evaluations, engine=s)
+         config=res.best_config, evaluations=res.evaluations, engine=s,
+         failures=_failure_counts(s))
 
 
 def compile_overlap() -> None:
@@ -96,7 +111,8 @@ def compile_overlap() -> None:
         emit(f"engine/random24_{label}", tm.dt * 1e6,
              f"compile_total_s={s['compile_total_s']:.2f} "
              f"overlap={s['compile_overlap_ratio']:.2f}",
-             evaluations=res.evaluations, engine=s)
+             evaluations=res.evaluations, engine=s,
+             failures=_failure_counts(s))
     emit("engine/compile_overlap_speedup", 0.0,
          f"{wall['serial'] / max(wall['pooled'], 1e-9):.2f}x "
          f"(serial {wall['serial']:.2f}s vs pooled {wall['pooled']:.2f}s)")
@@ -112,7 +128,8 @@ def sa_speculative() -> None:
     emit("engine/sa40_speculative", res.best_time * 1e6,
          f"spec_compiles={s['speculative_compiles']} "
          f"spec_hits={s['speculative_hits']} pruned={s['pruned']}",
-         evaluations=res.evaluations, engine=s)
+         evaluations=res.evaluations, engine=s,
+         failures=_failure_counts(s))
 
 
 def pso200_gemm_analytical() -> None:
@@ -126,7 +143,59 @@ def pso200_gemm_analytical() -> None:
          f"compiles={s.get('compile_calls')} evals={s.get('evaluations')} "
          f"memo={s.get('memo_hits')}",
          config=out.best_config, evaluations=out.result.evaluations,
-         engine=s)
+         engine=s, failures=_failure_counts(s))
+
+
+def failure_isolation() -> None:
+    """A third of the space cannot build; the sweep must still complete.
+
+    The acceptance-mirror for the failure-isolating engine: every broken
+    configuration becomes an ``inf`` trial with a FailureRecord, the
+    budget is fully spent, and the best config comes from the surviving
+    two thirds.  The record turns ``error`` if coverage is lost.
+    """
+
+    def build(cfg):
+        if cfg["MODE"] == "broken":
+            raise ValueError(f"unbuildable configuration: {cfg}")
+        iters = cfg["ITERS"]
+
+        def fn(a, b):
+            x = a
+            for _ in range(iters):
+                x = jnp.tanh(x @ b)
+            return x
+        return fn
+
+    def make_args(rng):
+        return (jnp.asarray(rng.normal(size=(PROBE_N, PROBE_N)), jnp.float32),
+                jnp.asarray(rng.normal(size=(PROBE_N, PROBE_N)), jnp.float32))
+
+    sp = SearchSpace()
+    sp.add_parameter(name="MODE", values=("fast", "slow", "broken"))
+    sp.add_parameter(name="ITERS", values=(1, 2, 4))
+    spec = KernelSpec(name="failure_probe", build=build, make_args=make_args)
+    engine = EvaluationEngine(
+        WallClockEvaluator(repeats=2, verify_outputs=False), spec, sp,
+        EngineConfig(workers=2))
+    res = engine.run(make_strategy("full"), None, seed=0)
+    s = res.extra["engine"]
+    counts = _failure_counts(s)
+    survived = (s["evaluations"] == sp.size()
+                and res.best is not None
+                and res.best_config["MODE"] != "broken"
+                and counts["prepare"] == 3
+                and all(t.failure is not None for t in res.failures()))
+    emit("engine/failure_isolation", res.best_time * 1e6,
+         (f"evals={s['evaluations']}/{sp.size()} "
+          f"prepare_failures={counts['prepare']} "
+          f"measure_failures={counts['measure']}"
+          if survived else
+          f"failure isolation broken: evals={s['evaluations']}/{sp.size()} "
+          f"failures={counts} best={res.best_config}"),
+         status="ok" if survived else "error",
+         config=res.best_config, evaluations=res.evaluations, engine=s,
+         failures=counts)
 
 
 def main() -> None:
@@ -134,6 +203,7 @@ def main() -> None:
     compile_overlap()
     sa_speculative()
     pso200_gemm_analytical()
+    failure_isolation()
 
 
 if __name__ == "__main__":

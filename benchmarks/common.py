@@ -44,6 +44,10 @@ class Record:
     evaluations: Optional[int] = None
     #: EvaluationEngine stats dict (compile_calls, memo_hits, pruned, ...)
     engine: Optional[Dict[str, Any]] = None
+    #: per-config failure counts behind this row, e.g. {"prepare": 2,
+    #: "measure": 1} — compare.py gates on growth here (new failures mean
+    #: the benchmark silently measured fewer configs than the baseline)
+    failures: Optional[Dict[str, int]] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = {"name": self.name, "us_per_call": round(self.us_per_call, 3),
@@ -55,6 +59,8 @@ class Record:
             d["evaluations"] = int(self.evaluations)
         if self.engine is not None:
             d["engine"] = self.engine
+        if self.failures is not None:
+            d["failures"] = {k: int(v) for k, v in self.failures.items()}
         return d
 
 
@@ -79,11 +85,12 @@ def emit(name: str, us_per_call: float, derived: str = "", *,
          status: str = "ok",
          config: Optional[Dict[str, Any]] = None,
          evaluations: Optional[int] = None,
-         engine: Optional[Dict[str, Any]] = None) -> Record:
+         engine: Optional[Dict[str, Any]] = None,
+         failures: Optional[Dict[str, int]] = None) -> Record:
     """Benchmark output contract: CSV line + structured record."""
     rec = Record(name=name, us_per_call=float(us_per_call), derived=derived,
                  status=status, config=config, evaluations=evaluations,
-                 engine=engine)
+                 engine=engine, failures=failures)
     if _records is not None:
         _records.append(rec)
     suffix = derived if status == "ok" else f"ERROR:{derived}"

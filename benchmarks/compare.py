@@ -15,6 +15,12 @@ Exit codes (CI wires them to different severities):
 Only records present in both files with status "ok" and a nonzero
 ``us_per_call`` at least ``--min-us`` in the baseline are compared;
 derived-only rows (us_per_call == 0) carry no timing signal.
+
+Records may carry a ``failures`` object ({"prepare": n, "measure": n})
+counting per-config evaluation failures behind the row.  Failure *growth*
+versus the baseline is a regression (exit 1): every newly-failing config
+is one the benchmark silently stopped measuring, i.e. coverage loss that
+would otherwise masquerade as a timing change.
 """
 
 from __future__ import annotations
@@ -85,6 +91,20 @@ def _timing_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
     return idx
 
 
+def _failure_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
+    """(section, record) -> total per-config failures behind that record.
+
+    A record without a ``failures`` object counts as 0, so baselines from
+    before the field existed gate new failures just the same.
+    """
+    idx = {}
+    for sname, sec in doc.get("sections", {}).items():
+        for rec in sec.get("records", []):
+            failures = rec.get("failures") or {}
+            idx[(sname, rec["name"])] = sum(int(v) for v in failures.values())
+    return idx
+
+
 def compare(base: Dict[str, Any], cur: Dict[str, Any],
             threshold: float, min_us: float) -> Tuple[int, List[str]]:
     """Return (exit_code, messages) for a baseline-vs-current diff."""
@@ -120,6 +140,19 @@ def compare(base: Dict[str, Any], cur: Dict[str, Any],
                 f"(+{rel:.0%} > +{threshold:.0%})")
         messages.append(f"  {key[0]}/{key[1]}: {base_us:.1f}us -> "
                         f"{cur_us:.1f}us ({rel:+.0%})")
+
+    # coverage gate: per-config failure growth means the benchmark stopped
+    # measuring configs the baseline still covered
+    base_fail = _failure_index(base)
+    cur_fail = _failure_index(cur)
+    for key, n_cur in sorted(cur_fail.items()):
+        if key not in base_fail:
+            continue        # record new in current: nothing to compare
+        n_base = base_fail[key]
+        if n_cur > n_base:
+            regressions.append(
+                f"{key[0]}/{key[1]}: per-config failures grew "
+                f"{n_base} -> {n_cur} (coverage loss)")
     if regressions:
         return REGRESSION, ["REGRESSIONS:"] + regressions
     compared = sum(1 for k, v in base_idx.items()

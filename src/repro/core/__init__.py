@@ -14,6 +14,10 @@ from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
                          Measurement, TPUAnalyticalEvaluator,
                          WallClockEvaluator, make_evaluator,
                          median_prune_loop)
+from .failures import (CompileError, EvaluationError, EvaluationTimeout,
+                       FailureRecord, InfeasibleConfigError, MeasureError,
+                       RetryPolicy, TransientError, VerificationFailure,
+                       summarize_failures)
 from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
@@ -36,6 +40,9 @@ __all__ = [
     "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
     "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
     "median_prune_loop",
+    "CompileError", "EvaluationError", "EvaluationTimeout", "FailureRecord",
+    "InfeasibleConfigError", "MeasureError", "RetryPolicy", "TransientError",
+    "VerificationFailure", "summarize_failures",
     "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",

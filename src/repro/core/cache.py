@@ -11,11 +11,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
+import math
 import os
 import tempfile
 import threading
 import time
 from typing import Any, Dict, Optional
+
+log = logging.getLogger("repro.cache")
 
 _DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "tune",
                              "tuned_configs.json")
@@ -50,21 +54,53 @@ class CacheEntry:
 
 
 class TuningCache:
-    """Thread-safe JSON-backed map: (kernel, shape, profile) -> best config."""
+    """Thread-safe JSON-backed map: (kernel, shape, profile) -> best config.
+
+    Every access — reads included — holds the lock: concurrent tuning
+    sessions ``put`` from worker threads while ops look configs up, and an
+    unlocked ``get``/``entries``/``len`` would race the lazy first load
+    and in-place mutation.  The lock is re-entrant so the lazy
+    ``_ensure_loaded`` can run inside any public method without the old
+    double-lock dance.
+
+    The JSON on disk is *strict* (``allow_nan=False``): a ``time_s`` of
+    ``Infinity``/``NaN`` is not valid JSON and breaks every non-Python
+    consumer, so non-finite entries are refused at :meth:`record`/:meth:`put`
+    time and rejected again at :meth:`save` time as defense in depth.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = os.path.abspath(path or _default_path())
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self._data: Dict[str, Dict[str, Any]] = {}
         self._loaded = False
 
     # -- persistence ---------------------------------------------------------
+    def _load_locked(self) -> None:
+        if os.path.exists(self.path):
+            with open(self.path, "r") as f:
+                data = json.load(f)
+            # files written before the strict-JSON change may carry
+            # Infinity/NaN times; drop them here so the next save() —
+            # which refuses non-finite values — cannot crash on legacy
+            # poison and lose the fresh results
+            bad = [k for k, v in data.items()
+                   if isinstance(v, dict)
+                   and isinstance(v.get("time_s"), float)
+                   and not math.isfinite(v["time_s"])]
+            for k in bad:
+                log.warning("cache: dropping legacy non-finite entry %r", k)
+                del data[k]
+            self._data = data
+        self._loaded = True
+
+    def _ensure_loaded(self) -> None:
+        if not self._loaded:
+            self._load_locked()
+
     def load(self) -> "TuningCache":
         with self._lock:
-            if os.path.exists(self.path):
-                with open(self.path, "r") as f:
-                    self._data = json.load(f)
-            self._loaded = True
+            self._load_locked()
         return self
 
     def save(self) -> None:
@@ -75,27 +111,30 @@ class TuningCache:
                                        suffix=".tmp")
             try:
                 with os.fdopen(fd, "w") as f:
-                    json.dump(self._data, f, indent=2, sort_keys=True)
+                    # strict JSON: raise rather than emit Infinity/NaN
+                    json.dump(self._data, f, indent=2, sort_keys=True,
+                              allow_nan=False)
                 os.replace(tmp, self.path)
             finally:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
 
-    def _ensure(self) -> None:
-        if not self._loaded:
-            self.load()
-
     # -- access ---------------------------------------------------------------
     def get(self, kernel: str, shape_key: str, profile: str) -> Optional[CacheEntry]:
-        self._ensure()
-        raw = self._data.get(_key(kernel, shape_key, profile))
+        with self._lock:
+            self._ensure_loaded()
+            raw = self._data.get(_key(kernel, shape_key, profile))
         return CacheEntry.from_json(raw) if raw else None
 
     def put(self, kernel: str, shape_key: str, profile: str,
             entry: CacheEntry, only_if_better: bool = True) -> bool:
-        self._ensure()
+        if not math.isfinite(entry.time_s):
+            log.warning("cache: refusing non-finite time_s=%r for %s",
+                        entry.time_s, _key(kernel, shape_key, profile))
+            return False
         k = _key(kernel, shape_key, profile)
         with self._lock:
+            self._ensure_loaded()
             old = self._data.get(k)
             if only_if_better and old and old["time_s"] <= entry.time_s:
                 return False
@@ -103,12 +142,20 @@ class TuningCache:
         return True
 
     def entries(self) -> Dict[str, CacheEntry]:
-        self._ensure()
-        return {k: CacheEntry.from_json(v) for k, v in self._data.items()}
+        with self._lock:
+            self._ensure_loaded()
+            snapshot = dict(self._data)
+        return {k: CacheEntry.from_json(v) for k, v in snapshot.items()}
 
     def record(self, kernel: str, shape_key: str, profile: str,
                config: Dict[str, Any], time_s: float, strategy: str,
                evaluations: int) -> bool:
+        """Record a tuning winner; refuses non-finite times (a failed tune
+        must never poison the cache other tools parse)."""
+        if not math.isfinite(time_s):
+            log.warning("cache: refusing to record non-finite time_s=%r "
+                        "for kernel=%r shape=%r", time_s, kernel, shape_key)
+            return False
         return self.put(kernel, shape_key, profile, CacheEntry(
             config=config, time_s=time_s, strategy=strategy,
             evaluations=evaluations, timestamp=time.time()))
@@ -122,8 +169,9 @@ class TuningCache:
                 os.unlink(self.path)
 
     def __len__(self) -> int:
-        self._ensure()
-        return len(self._data)
+        with self._lock:
+            self._ensure_loaded()
+            return len(self._data)
 
 
 _default_cache: Optional[TuningCache] = None

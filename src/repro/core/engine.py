@@ -28,6 +28,16 @@ Two further throughput levers:
   it, the remaining repeats are aborted (the candidate already lost).
   The incumbent itself can never be pruned: anything at least as fast
   keeps its running median below the threshold.
+
+**Failure isolation** (CLTune §III: failing configurations are tolerated):
+any per-config exception — compile error, lowering error, runtime OOM,
+timeout, verification mismatch — is caught at the future boundary and
+converted into an ``inf``-time trial carrying a structured
+:class:`~repro.core.failures.FailureRecord`; the search continues.  A
+:class:`~repro.core.failures.RetryPolicy` re-attempts transient failures,
+and a ``max_failures`` circuit-breaker aborts the run gracefully (keeping
+every measurement already taken) once the space looks systematically
+broken.
 """
 
 from __future__ import annotations
@@ -37,11 +47,13 @@ import math
 import os
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .evaluators import Evaluator, KernelSpec, Measurement
+from .failures import (CircuitBreakerTripped, CompileError, FailureRecord,
+                       RetryPolicy, summarize_failures)
 from .space import Config, SearchSpace
-from .strategies import SearchResult, Strategy
+from .strategies import SearchResult, Strategy, Trial
 
 
 def _default_workers() -> int:
@@ -71,6 +83,14 @@ class EngineConfig:
     #: for batch-of-1 strategies, pre-compile up to this many neighbours
     #: of the asked config while its measurement runs; 0 disables
     speculate: int = 0
+    #: retry policy for failed evaluations: a RetryPolicy, an int
+    #: (max_retries shorthand), a kwargs dict, or None (no retries)
+    retry: "RetryPolicy | int | Dict[str, Any] | None" = None
+    #: circuit-breaker: abort the search once this many *distinct* configs
+    #: have failed (None = never abort; failures stay isolated trials).
+    #: Size it relative to the budget — it exists to catch spaces that are
+    #: systematically broken (bad spec, wrong shapes), not hostile ones.
+    max_failures: Optional[int] = None
 
     def __post_init__(self):
         if self.workers is None:
@@ -79,6 +99,9 @@ class EngineConfig:
             raise ValueError("workers must be >= 1")
         if self.prune_factor is not None and self.prune_factor < 1.0:
             raise ValueError("prune_factor must be >= 1 (or None)")
+        self.retry = RetryPolicy.normalize(self.retry)
+        if self.max_failures is not None and self.max_failures < 1:
+            raise ValueError("max_failures must be >= 1 (or None)")
 
 
 @dataclasses.dataclass
@@ -92,6 +115,10 @@ class EngineStats:
     speculative_compiles: int = 0
     speculative_hits: int = 0       # speculated artifacts later consumed
     pruned: int = 0                 # measurements aborted by early stop
+    compile_failures: int = 0       # distinct configs failed in prepare
+    measure_failures: int = 0       # distinct configs failed in measure
+    retries: int = 0                # extra evaluation attempts made
+    aborted: bool = False           # circuit-breaker stopped the search
     batches: int = 0
     max_batch: int = 0
     compile_total_s: float = 0.0    # sum of per-config compile durations
@@ -130,7 +157,9 @@ class EvaluationEngine:
         engine = EvaluationEngine(evaluator, spec, space, EngineConfig())
         result = engine.run(make_strategy("pso"), budget=200, seed=0)
         result.extra["engine"]          # EngineStats dict
+        result.extra.get("failures")    # failure summary, when any occurred
         engine.measurements             # config_key -> Measurement
+        engine.failures                 # config_key -> FailureRecord
     """
 
     def __init__(self, evaluator: Evaluator, spec: KernelSpec,
@@ -142,7 +171,12 @@ class EvaluationEngine:
         self.config = config or EngineConfig()
         #: per-run memo: canonical config key -> Measurement
         self.measurements: Dict[Tuple, Measurement] = {}
+        #: canonical config key -> FailureRecord for every failed config
+        self.failures: Dict[Tuple, FailureRecord] = {}
         self.stats = EngineStats()
+        self._incumbent = math.inf
+        #: (config, time) in tell order — the source for partial results
+        self._history: List[Tuple[Config, float]] = []
 
     # -- internals -----------------------------------------------------------
     def _timed_prepare(self, config: Config) -> Tuple[Any, float]:
@@ -184,6 +218,125 @@ class EvaluationEngine:
             self.stats.speculative_compiles += 1
             budget -= 1
 
+    # -- failure-isolated evaluation of one config ---------------------------
+    def _evaluate_config(self, config: Config, key: Tuple,
+                         fut: "Future",
+                         ) -> Tuple[Measurement, Optional[FailureRecord]]:
+        """prepare + measure one config; exceptions become FailureRecords.
+
+        This is the fault boundary: whatever an evaluator raises — typed
+        :class:`~repro.core.failures.EvaluationError`\\ s from the built-ins,
+        bare exceptions from user evaluators, exceptions re-raised from the
+        compile pool's future — ends here as an ``inf`` Measurement plus a
+        structured FailureRecord, never as a crashed search.  The retry
+        policy re-attempts failures it classifies as transient; retries
+        recompile inline (the pooled artifact is gone).
+        """
+        cfg = self.config
+        attempts = 0
+        prepared = None
+        have_artifact = False
+        while True:
+            attempts += 1
+            stage = "prepare"
+            try:
+                if not have_artifact:
+                    if fut is not None:
+                        t_wait0 = time.perf_counter()
+                        try:
+                            prepared, compile_s = fut.result()
+                        finally:
+                            self.stats.compile_wait_s += (time.perf_counter()
+                                                          - t_wait0)
+                            fut = None  # a retry must recompile, not re-read
+                    else:   # retry: the pooled compile already failed us
+                        self.stats.compile_calls += 1
+                        prepared, compile_s = self._timed_prepare(config)
+                    self.stats.compile_total_s += compile_s
+                    if isinstance(prepared, Measurement) and not prepared.ok:
+                        # legacy evaluators signal compile failure by
+                        # returning a failed Measurement instead of raising
+                        raise CompileError(prepared.error
+                                           or "prepare() reported failure")
+                    have_artifact = True
+                stage = "measure"
+                threshold = None
+                if (cfg.prune_factor is not None
+                        and math.isfinite(self._incumbent)):
+                    threshold = cfg.prune_factor * self._incumbent
+                t_meas0 = time.perf_counter()
+                try:
+                    m = self.evaluator.measure(self.spec, config, prepared,
+                                               prune_threshold_s=threshold)
+                finally:
+                    self.stats.measure_total_s += (time.perf_counter()
+                                                   - t_meas0)
+                if not m.ok:
+                    # legacy not-ok Measurement: a failure trial, not a
+                    # crash.  Coerce the objective to inf — a not-ok
+                    # result with a finite time must never win the search
+                    # or reach the tuned-config cache.
+                    if math.isfinite(m.time_s):
+                        m = dataclasses.replace(m, time_s=math.inf)
+                    return m, FailureRecord(
+                        stage="measure", error_type="FailedMeasurement",
+                        message=(m.error or "measurement reported not-ok"),
+                        config_key=key, attempts=attempts)
+                return m, None
+            except Exception as e:  # noqa: BLE001 — the fault boundary
+                if self.config.retry.should_retry(e, attempts):
+                    self.stats.retries += 1
+                    if stage == "prepare":
+                        have_artifact = False   # recompile on the retry
+                    # measure-stage retries reuse the valid artifact: the
+                    # compile succeeded, only the timing run misbehaved
+                    continue
+                record = FailureRecord.from_exception(
+                    e, stage=stage, config_key=key, attempts=attempts)
+                return (Measurement(time_s=math.inf, ok=False,
+                                    error=str(e)[:500]), record)
+
+    def _record_failure(self, key: Tuple, record: FailureRecord) -> None:
+        self.failures[key] = record
+        if record.stage == "measure":
+            self.stats.measure_failures += 1
+        else:
+            self.stats.compile_failures += 1
+        limit = self.config.max_failures
+        if limit is not None and len(self.failures) >= limit:
+            raise CircuitBreakerTripped(len(self.failures),
+                                        self.stats.evaluations, limit)
+
+    def _partial_result(self, strategy: Strategy,
+                        tripped: CircuitBreakerTripped) -> SearchResult:
+        """Synthesize a SearchResult from the evaluations already told.
+
+        The driver may be mid-generation (or, for the thread-bridged
+        sequential fallback, mid-``run``) when the breaker trips, so the
+        engine's own tell-order history — not the driver — is the source
+        of truth for an aborted search.
+        """
+        trials = [Trial(config=c, time=t, index=i)
+                  for i, (c, t) in enumerate(self._history)]
+        best = None
+        for t in trials:
+            if t.ok and (best is None or t.time < best.time):
+                best = t
+        return SearchResult(
+            strategy.name, trials, best, len(trials),
+            extra={"aborted": {"reason": str(tripped),
+                               "failures": len(self.failures),
+                               "max_failures": tripped.limit}})
+
+    def _attach_failures(self, result: SearchResult) -> None:
+        """Give every failed trial its FailureRecord (by config identity)."""
+        if not self.failures:
+            return
+        for trial in result.trials:
+            if trial.failure is None and not trial.ok:
+                trial.failure = self.failures.get(
+                    self.space.config_key(trial.config))
+
     # -- the run loop --------------------------------------------------------
     def run(self, strategy: Strategy, budget: Optional[int],
             seed: int = 0) -> SearchResult:
@@ -198,9 +351,18 @@ class EvaluationEngine:
                 if cfg.workers > 1 else None)
         in_flight: Dict[Tuple, Future] = {}
         speculative: set = set()
-        incumbent = math.inf
+        # per-run state: the memo, failure map and stats are documented as
+        # one run's record (readable after run() returns); a second run on
+        # the same engine starts clean — carried-over failures would trip
+        # the circuit breaker on the first fresh failure
+        self.measurements = {}
+        self.failures = {}
+        self.stats = EngineStats()
+        self._incumbent = math.inf
+        self._history = []
+        tripped: Optional[CircuitBreakerTripped] = None
         try:
-            while True:
+            while tripped is None:
                 batch = driver.ask()
                 if not batch:
                     break
@@ -218,6 +380,7 @@ class EvaluationEngine:
                 # 3. serialized measurement, memo-first, in batch order
                 results = []
                 for config, key in zip(batch, keys):
+                    failure = None
                     if key in self.measurements:
                         m = self.measurements[key]
                         self.stats.memo_hits += 1
@@ -225,35 +388,40 @@ class EvaluationEngine:
                         if key in speculative:
                             speculative.discard(key)
                             self.stats.speculative_hits += 1
-                        t_wait0 = time.perf_counter()
-                        prepared, compile_s = in_flight.pop(key).result()
-                        self.stats.compile_wait_s += (time.perf_counter()
-                                                      - t_wait0)
-                        self.stats.compile_total_s += compile_s
-                        threshold = None
-                        if (cfg.prune_factor is not None
-                                and math.isfinite(incumbent)):
-                            threshold = cfg.prune_factor * incumbent
-                        t_meas0 = time.perf_counter()
-                        m = self.evaluator.measure(
-                            self.spec, config, prepared,
-                            prune_threshold_s=threshold)
-                        self.stats.measure_total_s += (time.perf_counter()
-                                                       - t_meas0)
+                        m, failure = self._evaluate_config(
+                            config, key, in_flight.pop(key))
                         self.measurements[key] = m
                         self.stats.unique_configs += 1
                         if m.pruned:
                             self.stats.pruned += 1
                     self.stats.evaluations += 1
-                    if m.ok and m.time_s < incumbent:
-                        incumbent = m.time_s
+                    if m.ok and m.time_s < self._incumbent:
+                        self._incumbent = m.time_s
                     results.append((config, m.time_s))
-                driver.tell(results)
-            result = driver.result()
+                    self._history.append((dict(config), float(m.time_s)))
+                    if failure is not None:
+                        try:
+                            self._record_failure(key, failure)
+                        except CircuitBreakerTripped as t:
+                            tripped = t
+                            self.stats.aborted = True
+                            break
+                # a partial tell (breaker mid-batch) is fine: every driver
+                # accepts fewer results than it asked for
+                if results:
+                    driver.tell(results)
+            if tripped is None:
+                result = driver.result()
+            else:
+                result = self._partial_result(strategy, tripped)
         finally:
             driver.close()
             if pool is not None:
                 pool.shutdown(wait=False, cancel_futures=True)
         self.stats.wall_s = time.perf_counter() - t_run0
+        self._attach_failures(result)
         result.extra["engine"] = self.stats.as_dict()
+        if self.failures:
+            result.extra["failures"] = summarize_failures(
+                list(self.failures.values()))
         return result

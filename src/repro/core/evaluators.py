@@ -30,6 +30,8 @@ import jax
 import numpy as np
 
 from . import verify
+from .failures import (CompileError, EvaluationError, InfeasibleConfigError,
+                       MeasureError, VerificationFailure)
 from .hlo import collective_stats
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config
@@ -111,21 +113,36 @@ class Evaluator:
     Evaluation optionally splits into two phases for the parallel engine:
 
     * ``prepare(spec, config)`` — the compilation phase.  Must be safe to
-      run concurrently from a worker pool; returns an opaque artifact (or
-      a failed :class:`Measurement`).  The default does nothing.
+      run concurrently from a worker pool; returns an opaque artifact.
+      The default does nothing.
     * ``measure(spec, config, prepared, prune_threshold_s)`` — the timing
       phase, always serialized by the engine so measurements never
       contend.  ``prune_threshold_s`` enables early-stop pruning where
       the backend supports it.
 
+    **Failure contract**: a configuration that cannot be evaluated raises
+    a typed :class:`~repro.core.failures.EvaluationError` subclass —
+    :class:`~repro.core.failures.CompileError` from ``prepare``,
+    :class:`~repro.core.failures.MeasureError` (or
+    :class:`~repro.core.failures.VerificationFailure`) from ``measure`` —
+    carrying the original exception as ``__cause__``.  The evaluation
+    engine converts these into ``inf``-time trials with structured
+    FailureRecords.  Returning a failed :class:`Measurement` from either
+    phase is the legacy convention and still tolerated.
+
     ``evaluate`` remains the one-call path and is definitionally
-    ``measure(spec, config, prepare(spec, config))``.
+    ``measure(spec, config, prepare(spec, config))`` with typed errors
+    folded back into failed Measurements (so bare objective adapters
+    keep seeing ``inf`` instead of exceptions).
     """
 
     name = "base"
 
     def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
-        return self.measure(spec, config, self.prepare(spec, config))
+        try:
+            return self.measure(spec, config, self.prepare(spec, config))
+        except EvaluationError as e:
+            return _failed(e)
 
     def prepare(self, spec: KernelSpec, config: Config) -> Any:
         """Concurrent compile phase; default: nothing to prepare."""
@@ -181,7 +198,7 @@ class WallClockEvaluator(Evaluator):
 
     def prepare(self, spec: KernelSpec, config: Config):
         if spec.make_args is None:
-            return _failed("WallClockEvaluator requires spec.make_args")
+            raise CompileError("WallClockEvaluator requires spec.make_args")
         rng = np.random.default_rng(self.seed)
         try:
             args = spec.make_args(rng)
@@ -191,7 +208,7 @@ class WallClockEvaluator(Evaluator):
             jax.block_until_ready(out)
             compile_s = time.perf_counter() - t0
         except Exception as e:  # noqa: BLE001 — any build/compile error = failed config
-            return _failed(e)
+            raise CompileError(f"{type(e).__name__}: {e}") from e
         return _CompiledKernel(fn=fn, args=args, out=out, compile_s=compile_s)
 
     def measure(self, spec: KernelSpec, config: Config,
@@ -212,7 +229,8 @@ class WallClockEvaluator(Evaluator):
                                           atol=self.atol, rtol=self.rtol)
                 verified = True
             except Exception as e:  # verification failure => config is invalid
-                return _failed(f"verification failed: {e}", compile_s)
+                raise VerificationFailure(
+                    f"verification failed: {e}") from e
 
         try:
             for _ in range(max(0, self.warmup - 1)):
@@ -228,7 +246,7 @@ class WallClockEvaluator(Evaluator):
                 min_samples=2)
             t = float(np.median(samples))
         except Exception as e:  # noqa: BLE001
-            return _failed(e, compile_s)
+            raise MeasureError(f"{type(e).__name__}: {e}") from e
         detail = {"min_s": float(np.min(samples)),
                   "max_s": float(np.max(samples)),
                   "samples": float(len(samples))}
@@ -258,7 +276,7 @@ class CostModelEvaluator(Evaluator):
     def prepare(self, spec: KernelSpec, config: Config):
         """Lower + compile + extract costs (the parallelizable phase)."""
         if spec.arg_specs is None:
-            return _failed("CostModelEvaluator requires spec.arg_specs")
+            raise CompileError("CostModelEvaluator requires spec.arg_specs")
         try:
             t0 = time.perf_counter()
             fn = spec.build(config)
@@ -269,7 +287,7 @@ class CostModelEvaluator(Evaluator):
             if isinstance(cost, (list, tuple)):   # older jax: one dict/device
                 cost = cost[0] if cost else {}
         except Exception as e:  # noqa: BLE001
-            return _failed(e)
+            raise CompileError(f"{type(e).__name__}: {e}") from e
         coll = 0.0
         if self.include_collectives:
             try:
@@ -337,13 +355,14 @@ class TPUAnalyticalEvaluator(Evaluator):
                 prepared=None,
                 prune_threshold_s: Optional[float] = None) -> Measurement:
         if spec.analytical_model is None:
-            return _failed("TPUAnalyticalEvaluator requires spec.analytical_model")
+            raise CompileError(
+                "TPUAnalyticalEvaluator requires spec.analytical_model")
         try:
             t = float(spec.analytical_model(config, self.profile))
         except Exception as e:  # noqa: BLE001
-            return _failed(e)
+            raise MeasureError(f"{type(e).__name__}: {e}") from e
         if not math.isfinite(t):
-            return _failed("analytically infeasible (VMEM/limits)")
+            raise InfeasibleConfigError("analytically infeasible (VMEM/limits)")
         return Measurement(time_s=t * self._noise(config), ok=True,
                            detail={"model_time_s": t})
 

@@ -161,7 +161,16 @@ class SearchSpace:
 
     def sample_unique(self, rng: random.Random, count: int,
                       max_tries_factor: int = 200) -> List[Config]:
-        """Sample up to ``count`` distinct feasible configs."""
+        """Sample ``count`` distinct feasible configs.
+
+        Rejection sampling first; if it stalls (tight constraints, near-
+        duplicate draws) the remainder comes from a shuffled enumeration
+        of the unseen feasible configs — the same dense fallback
+        :meth:`sample` uses.  The result is shorter than ``count`` only
+        when the feasible space itself holds fewer than ``count`` configs;
+        callers (e.g. RandomSearch) report that shortfall instead of
+        silently under-spending their budget.
+        """
         seen = set()
         out: List[Config] = []
         tries = 0
@@ -173,6 +182,11 @@ class SearchSpace:
             if key not in seen:
                 seen.add(key)
                 out.append(cfg)
+        if len(out) < count:
+            remaining = [cfg for cfg in self
+                         if tuple(sorted(cfg.items())) not in seen]
+            rng.shuffle(remaining)
+            out.extend(remaining[: count - len(out)])
         return out
 
     # -- neighbourhood (for simulated annealing) ------------------------------

@@ -18,8 +18,9 @@ import math
 import queue
 import random
 import threading
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .failures import FailureRecord, summarize_failures
 from .space import Config, SearchSpace
 
 Objective = Callable[[Config], float]
@@ -32,6 +33,9 @@ class Trial:
     config: Config
     time: float                 # seconds (inf = failed/infeasible)
     index: int                  # evaluation order, 0-based
+    #: populated (by the evaluation engine) when this trial is a failed
+    #: configuration: the structured why — stage, exception type, message
+    failure: Optional[FailureRecord] = None
 
     @property
     def ok(self) -> bool:
@@ -62,6 +66,17 @@ class SearchResult:
             best = min(best, t.time)
             out.append(best)
         return out
+
+    def failures(self) -> List[Trial]:
+        """The failed/infeasible trials (inf time), in evaluation order."""
+        return [t for t in self.trials if not t.ok]
+
+    def failure_summary(self) -> Dict[str, Any]:
+        """Aggregate counts by stage/exception type of this run's failures."""
+        records = [t.failure for t in self.trials if t.failure is not None]
+        summary = summarize_failures(records)
+        summary["failed_trials"] = sum(1 for t in self.trials if not t.ok)
+        return summary
 
 
 class _Recorder:
@@ -148,9 +163,16 @@ class RandomSearch(Strategy):
     def run(self, space, objective, budget, seed=0) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
-        for cfg in space.sample_unique(rng, budget):
+        samples = space.sample_unique(rng, budget)
+        for cfg in samples:
             rec.evaluate(cfg)
-        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
+        extra: Dict[str, object] = {}
+        if len(samples) < budget:
+            # the feasible space is smaller than the budget: surface the
+            # shortfall instead of silently under-spending
+            extra["sample_shortfall"] = budget - len(samples)
+        return SearchResult(self.name, rec.trials, rec.best, rec.evaluations,
+                            extra=extra)
 
     def asktell(self, space, budget, seed=0) -> "AskTellDriver":
         return _RandomSearchAskTell(self, space, budget, seed=seed)
@@ -187,7 +209,11 @@ class SimulatedAnnealing(Strategy):
         rec = _Recorder(space, objective)
         current = space.sample(rng)
         t_cur = rec.evaluate(current)
-        scale = t_cur if math.isfinite(t_cur) and t_cur > 0 else 1.0
+        # Temperature scale: the first *finite* measurement, refreshed on
+        # dead-end restarts.  Seeding it from an inf (failed) first eval —
+        # or keeping a stale basin's scale after a restart — mis-sizes
+        # every subsequent acceptance probability.
+        scale = t_cur if math.isfinite(t_cur) and t_cur > 0 else None
         accepted_worse = 0
         while rec.evaluations < budget:
             nbr = space.random_neighbour(current, rng, mode=self.neighbour_mode)
@@ -196,9 +222,13 @@ class SimulatedAnnealing(Strategy):
                     break
                 current = space.sample(rng)
                 t_cur = rec.evaluate(current)
+                if math.isfinite(t_cur) and t_cur > 0:
+                    scale = t_cur           # recalibrate to the new basin
                 continue
             t_nbr = rec.evaluate(nbr)
-            # temperature in units of the initial measurement; linear cooling
+            if scale is None and math.isfinite(t_nbr) and t_nbr > 0:
+                scale = t_nbr               # first finite measurement seen
+            # temperature in units of the scale measurement; linear cooling
             frac_done = rec.evaluations / max(budget, 1)
             T = self.temperature * (1.0 - frac_done if self.cooling else 1.0)
             T = max(T, 1e-9)
@@ -207,7 +237,7 @@ class SimulatedAnnealing(Strategy):
             elif not math.isfinite(t_nbr):
                 p = 0.0                                     # never move into a wall
             else:
-                p = math.exp(-((t_nbr - t_cur) / scale) / T)
+                p = math.exp(-((t_nbr - t_cur) / (scale or 1.0)) / T)
             if rng.random() < p:
                 if t_nbr >= t_cur:
                     accepted_worse += 1
@@ -444,6 +474,7 @@ class SequentialAskTell(AskTellDriver):
         self._error: Optional[BaseException] = None
         self._finished = False
         self._awaiting_tell = False
+        self._aborted = False
 
         def _objective(config: Config) -> float:
             self._requests.put(dict(config))
@@ -485,6 +516,13 @@ class SequentialAskTell(AskTellDriver):
         self._responses.put(float(time_s))
 
     def result(self) -> SearchResult:
+        if self._aborted:
+            raise RuntimeError(
+                "result() unavailable: the driver was closed before the "
+                "search finished, so the strategy's own result would be a "
+                "drained partial run; the caller aborting the search is "
+                "responsible for assembling a partial result (the "
+                "EvaluationEngine synthesizes one from its tell history)")
         if not self._finished or self._result is None:
             raise RuntimeError("result() before the search finished")
         return self._result
@@ -492,7 +530,10 @@ class SequentialAskTell(AskTellDriver):
     def close(self) -> None:
         # Unblock an abandoned strategy thread (engine aborted mid-search):
         # answer every outstanding objective call with inf until run()
-        # returns.  Bounded because every strategy is budget-bounded.
+        # returns, then join the worker thread.  Bounded because every
+        # strategy is budget-bounded.
+        if not self._finished:
+            self._aborted = True
         while not self._finished:
             if self._awaiting_tell:
                 self._awaiting_tell = False
@@ -502,6 +543,7 @@ class SequentialAskTell(AskTellDriver):
                 self._finished = True
             else:
                 self._awaiting_tell = True
+        self._thread.join()
 
 
 class _BatchRecorder:
@@ -572,6 +614,7 @@ class _RandomSearchAskTell(AskTellDriver):
         self.strategy = strategy
         rng = random.Random(seed)
         self._pending: List[Config] = space.sample_unique(rng, budget)
+        self._shortfall = budget - len(self._pending)
         self._rec = _BatchRecorder()
 
     def ask(self) -> List[Config]:
@@ -583,8 +626,12 @@ class _RandomSearchAskTell(AskTellDriver):
             self._rec.add(cfg, t)
 
     def result(self) -> SearchResult:
+        extra: Dict[str, object] = {}
+        if self._shortfall > 0:
+            extra["sample_shortfall"] = self._shortfall
         return SearchResult(self.strategy.name, self._rec.trials,
-                            self._rec.best, self._rec.evaluations)
+                            self._rec.best, self._rec.evaluations,
+                            extra=extra)
 
 
 class _ParticleSwarmAskTell(AskTellDriver):

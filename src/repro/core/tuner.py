@@ -78,6 +78,12 @@ class TuningOutcome:
             return 0.0
         return sum(1 for t in self.result.trials if not t.ok) / n
 
+    @property
+    def failure_summary(self) -> Dict[str, Any]:
+        """Aggregated failure counts by stage/exception type (see
+        :meth:`repro.core.strategies.SearchResult.failure_summary`)."""
+        return self.result.failure_summary()
+
     def report(self, top_k: int = 5) -> str:
         budget = "exhaustive" if self.budget is None else str(self.budget)
         lines = [f"== tuning report: {self.kernel} "
@@ -92,6 +98,18 @@ class TuningOutcome:
             lines.append(f"  #{i + 1}: {t.time * 1e6:9.2f} us  {t.config}")
         if not ok:
             lines.append("  (no feasible configuration found)")
+        summary = self.failure_summary
+        if summary["failed_trials"]:
+            stages = ", ".join(f"{n} {stage}" for stage, n
+                               in sorted(summary["by_stage"].items()))
+            types = ", ".join(f"{n}x {t}" for t, n
+                              in sorted(summary["by_type"].items()))
+            lines.append(f"failures: {summary['failed_trials']} trial(s) "
+                         f"[{stages or 'unattributed'}]"
+                         + (f" ({types})" if types else ""))
+        aborted = self.result.extra.get("aborted")
+        if aborted:
+            lines.append(f"ABORTED: {aborted.get('reason')}")
         if self.engine_stats:
             s = self.engine_stats
             lines.append(
@@ -99,6 +117,8 @@ class TuningOutcome:
                 f"{s.get('evaluations', 0)} evaluations "
                 f"({s.get('memo_hits', 0)} memo hits, "
                 f"{s.get('pruned', 0)} pruned, "
+                f"{s.get('compile_failures', 0)}+"
+                f"{s.get('measure_failures', 0)} compile+measure failures, "
                 f"overlap={s.get('compile_overlap_ratio', 0.0):.0%})")
         return "\n".join(lines)
 
@@ -256,9 +276,11 @@ class Tuner:
         eng = EvaluationEngine(self.evaluator, self._spec, self.space,
                                config=engine)
         result = eng.run(strat, budget, seed=seed)
-        for key, m in eng.measurements.items():
-            if not m.ok:
-                log.debug("config %s failed: %s", key, m.error)
+        for record in eng.failures.values():
+            log.debug("config failed: %s", record)
+        if result.extra.get("aborted"):
+            log.warning("tuning aborted: %s",
+                        result.extra["aborted"].get("reason"))
 
         outcome = TuningOutcome(
             kernel=self._spec.name, result=result,

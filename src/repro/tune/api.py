@@ -183,21 +183,35 @@ class TuningSession:
             best = outcome.result.best
             desc = ("no feasible config" if best is None
                     else f"{best.time * 1e6:9.2f} us  {best.config}")
+            failed = outcome.failure_summary["failed_trials"]
+            if failed:
+                desc += f"  [{failed} failed trial(s)]"
+            if outcome.result.extra.get("aborted"):
+                desc += "  [ABORTED]"
             lines.append(f"  {key}: {desc}")
         stats = self.engine_stats()
         if stats["evaluations"]:
             lines.append(
                 f"  engine totals: {stats['compile_calls']} compiles / "
                 f"{stats['evaluations']} evaluations, "
-                f"{stats['memo_hits']} memo hits, {stats['pruned']} pruned")
+                f"{stats['memo_hits']} memo hits, {stats['pruned']} pruned, "
+                f"{stats['compile_failures']}+{stats['measure_failures']} "
+                f"compile+measure failures")
         return "\n".join(lines)
 
     def engine_stats(self) -> Dict[str, int]:
         """Aggregate engine counters across every tuned item."""
         totals = {"evaluations": 0, "unique_configs": 0, "memo_hits": 0,
-                  "compile_calls": 0, "pruned": 0}
+                  "compile_calls": 0, "pruned": 0,
+                  "compile_failures": 0, "measure_failures": 0, "retries": 0}
         for outcome in self.outcomes.values():
             s = outcome.engine_stats or {}
             for key in totals:
                 totals[key] += int(s.get(key, 0))
         return totals
+
+    def failure_summary(self) -> Dict[str, int]:
+        """Per-session failure counts, keyed by work item."""
+        return {key: outcome.failure_summary["failed_trials"]
+                for key, outcome in self.outcomes.items()
+                if outcome.failure_summary["failed_trials"]}

@@ -118,6 +118,48 @@ def test_schema_only_ignores_regressions_but_not_errors(tmp_path):
         == compare.HARD_FAIL
 
 
+# -- per-config failure gate (coverage loss from new failures) ---------------
+
+def frec(name, us, failures):
+    r = rec(name, us)
+    r["failures"] = failures
+    return r
+
+
+def test_failure_growth_is_a_regression(tmp_path):
+    base = doc(gemm=section([frec("a", 1000.0, {"prepare": 1, "measure": 0})]))
+    cur = doc(gemm=section([frec("a", 1000.0, {"prepare": 3, "measure": 0})]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+
+
+def test_new_failures_on_clean_baseline_regress(tmp_path):
+    # baseline predates the failures field entirely: treated as zero
+    cur = doc(gemm=section([rec("a", 1000.0),
+                            frec("b", 200.0, {"measure": 2})]))
+    assert run_main(tmp_path, BASE, cur) == compare.REGRESSION
+
+
+def test_equal_or_fewer_failures_pass(tmp_path):
+    base = doc(gemm=section([frec("a", 1000.0, {"prepare": 3})]))
+    same = doc(gemm=section([frec("a", 1000.0, {"prepare": 3})]))
+    fewer = doc(gemm=section([frec("a", 1000.0, {"prepare": 1})]))
+    assert run_main(tmp_path, base, same) == compare.OK
+    assert run_main(tmp_path, base, fewer) == compare.OK
+
+
+def test_failures_on_record_new_in_current_ignored(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0),
+                            frec("fresh", 50.0, {"prepare": 4})]))
+    assert run_main(tmp_path, BASE, cur) == compare.OK
+
+
+def test_emit_failures_lands_in_record_json():
+    common.begin_section()
+    common.emit("x", 1.0, failures={"prepare": 2, "measure": 0})
+    (record,) = common.end_section()
+    assert record.to_json()["failures"] == {"prepare": 2, "measure": 0}
+
+
 # -- run.py: per-record status propagation (the stdout-matching bug fix) -----
 
 def test_run_section_propagates_error_records():
