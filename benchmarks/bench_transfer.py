@@ -1,0 +1,120 @@
+"""Shape-transfer section: nearest-shape config reuse + warm-started search.
+
+CLTune scenario 3 says optimal parameters change with input arguments; the
+shape-transfer subsystem claims the *tuned knowledge* still carries across
+nearby shapes (Falch & Elster 1506.00842).  This section quantifies that
+claim on the GEMM shape sweep with the deterministic analytical evaluator
+(``noise_sigma=0`` — the records are reproducible and comparable across
+hosts):
+
+* ``gemm1024_full`` — exhaustive tune of ``M=N=K=1024``, recorded into a
+  scratch cache as the transfer source.
+* ``gemm1536_cold`` / ``gemm1536_warm`` — the same seeded annealing
+  searches on ``M=N=K=1536``, cold vs warm-started from the cache
+  (nearest tuned shape's config + heuristic as seeds).  ``evaluations``
+  is the mean number of evaluations until the search is within 5% of the
+  exhaustive best for 1536 — the evals-to-target metric ``compare.py``
+  gates on.
+* ``warm_vs_cold`` — the acceptance check: warm start must reach the 5%
+  target in at most *half* the cold evaluations (record turns ``error``
+  otherwise, which hard-fails the CI schema gate).
+* ``lookup_transfer_no_search`` — `lookup(policy=TRANSFER)` on a cache
+  miss must return a feasible transferred config *without* running any
+  search (the serve-time no-stall contract).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import tempfile
+from typing import List
+
+from repro.core import AutotunePolicy, TPUAnalyticalEvaluator, TuningCache, lookup
+from repro.kernels.matmul.ops import GEMM
+from repro.tune import tune_kernel
+
+from .common import RUNS, emit
+
+SHAPE_A = {"M": 1024, "N": 1024, "K": 1024}
+SHAPE_B = {"M": 1536, "N": 1536, "K": 1536}
+BUDGET = 64
+TARGET_FACTOR = 1.05
+
+
+def _evaluator() -> TPUAnalyticalEvaluator:
+    return TPUAnalyticalEvaluator(noise_sigma=0.0)
+
+
+def _evals_to_target(trace: List[float], target: float) -> int:
+    for i, best in enumerate(trace):
+        if best <= target:
+            return i + 1
+    return len(trace)                     # never reached: full budget spent
+
+
+def main() -> None:
+    tmpdir = tempfile.mkdtemp(prefix="repro-bench-transfer-")
+    cache = TuningCache(os.path.join(tmpdir, "transfer_cache.json"))
+
+    # -- transfer source: exhaustive tune of shape A into the cache --------
+    # (the huge explicit budget overrides GEMM's declared default of 100,
+    # which would otherwise cap the full enumeration)
+    src = tune_kernel(GEMM, SHAPE_A, strategy="full", budget=1_000_000,
+                      cache=cache, evaluator=_evaluator(), record=True,
+                      warm_start=False)
+    emit("transfer/gemm1024_full", src.best_time * 1e6,
+         f"evals={src.result.evaluations}", config=src.best_config,
+         evaluations=src.result.evaluations)
+
+    # -- reference: exhaustive best for shape B (never cached) -------------
+    ref = tune_kernel(GEMM, SHAPE_B, strategy="full", budget=1_000_000,
+                      cache=cache, evaluator=_evaluator(), record=False,
+                      warm_start=False)
+    target = TARGET_FACTOR * ref.best_time
+
+    # -- cold vs warm annealing sweeps over shape B ------------------------
+    evals = {"cold": [], "warm": []}
+    best = {"cold": math.inf, "warm": math.inf}
+    for i in range(max(RUNS, 2)):
+        for mode, warm in (("cold", False), ("warm", 3)):
+            out = tune_kernel(GEMM, SHAPE_B, strategy="annealing",
+                              budget=BUDGET, cache=cache, record=False,
+                              warm_start=warm, evaluator=_evaluator(),
+                              seed=1000 + i)
+            evals[mode].append(
+                _evals_to_target(out.result.progress_trace(), target))
+            best[mode] = min(best[mode], out.best_time)
+    mean = {m: sum(v) / len(v) for m, v in evals.items()}
+    for mode in ("cold", "warm"):
+        emit(f"transfer/gemm1536_{mode}", best[mode] * 1e6,
+             f"mean_evals_to_5pct={mean[mode]:.1f} runs={len(evals[mode])} "
+             f"budget={BUDGET}",
+             evaluations=int(round(mean[mode])))
+
+    ok = mean["warm"] <= 0.5 * mean["cold"]
+    emit("transfer/warm_vs_cold", 0.0,
+         (f"warm {mean['warm']:.1f} vs cold {mean['cold']:.1f} evals to "
+          f"within 5% ({mean['warm'] / max(mean['cold'], 1e-9):.2f}x)"
+          if ok else
+          f"warm start too slow: {mean['warm']:.1f} evals vs cold "
+          f"{mean['cold']:.1f} (need <= half)"),
+         status="ok" if ok else "error")
+
+    # -- TRANSFER lookup: feasible config on a miss, zero search -----------
+    n_before = len(cache)
+    cfg = lookup(GEMM, SHAPE_B, cache=cache, policy=AutotunePolicy.TRANSFER)
+    space = GEMM.make_space(SHAPE_B)
+    transferred = (len(cache) == n_before       # no tune ran / recorded
+                   and space.is_feasible(cfg)
+                   and cfg == src.best_config)  # borrowed from shape A
+    emit("transfer/lookup_transfer_no_search", 0.0,
+         (f"config transferred from M=N=K=1024, feasible for 1536: {cfg}"
+          if transferred else
+          f"transfer lookup broken: cache {n_before}->{len(cache)}, "
+          f"feasible={space.is_feasible(cfg)}, cfg={cfg}"),
+         status="ok" if transferred else "error", config=cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,14 @@ counting per-config evaluation failures behind the row.  Failure *growth*
 versus the baseline is a regression (exit 1): every newly-failing config
 is one the benchmark silently stopped measuring, i.e. coverage loss that
 would otherwise masquerade as a timing change.
+
+Records may also carry an ``evaluations`` count.  Where the count is a
+search-efficiency metric (the transfer section's evals-to-within-5%),
+growth beyond ``--evals-threshold`` (relative, default 0.25) versus the
+baseline is a regression too: a warm-started search that needs more
+evaluations to reach target than it used to has lost the very thing the
+warm start buys.  These counts come from seeded searches over the
+deterministic analytical model, so they are stable across hosts.
 """
 
 from __future__ import annotations
@@ -91,6 +99,16 @@ def _timing_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
     return idx
 
 
+def _evaluations_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
+    """(section, record) -> evaluation count, for records that carry one."""
+    idx = {}
+    for sname, sec in doc.get("sections", {}).items():
+        for rec in sec.get("records", []):
+            if isinstance(rec.get("evaluations"), int):
+                idx[(sname, rec["name"])] = int(rec["evaluations"])
+    return idx
+
+
 def _failure_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
     """(section, record) -> total per-config failures behind that record.
 
@@ -106,7 +124,8 @@ def _failure_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
 
 
 def compare(base: Dict[str, Any], cur: Dict[str, Any],
-            threshold: float, min_us: float) -> Tuple[int, List[str]]:
+            threshold: float, min_us: float,
+            evals_threshold: float = 0.25) -> Tuple[int, List[str]]:
     """Return (exit_code, messages) for a baseline-vs-current diff."""
     messages: List[str] = []
     missing = [s for s in base.get("sections", {})
@@ -153,6 +172,21 @@ def compare(base: Dict[str, Any], cur: Dict[str, Any],
             regressions.append(
                 f"{key[0]}/{key[1]}: per-config failures grew "
                 f"{n_base} -> {n_cur} (coverage loss)")
+
+    # search-efficiency gate: evaluation-count growth (e.g. warm-start
+    # evals-to-target in the transfer section) means tuned knowledge
+    # stopped transferring as well as the baseline shows it can
+    base_evals = _evaluations_index(base)
+    cur_evals = _evaluations_index(cur)
+    for key, n_cur in sorted(cur_evals.items()):
+        if key not in base_evals:
+            continue        # record new in current: nothing to compare
+        n_base = base_evals[key]
+        if n_base > 0 and n_cur > n_base * (1.0 + evals_threshold):
+            regressions.append(
+                f"{key[0]}/{key[1]}: evaluations grew {n_base} -> {n_cur} "
+                f"(+{n_cur / n_base - 1.0:.0%} > +{evals_threshold:.0%}, "
+                f"search-efficiency loss)")
     if regressions:
         return REGRESSION, ["REGRESSIONS:"] + regressions
     compared = sum(1 for k, v in base_idx.items()
@@ -171,6 +205,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore baseline records faster than this "
                          "(timing noise floor, default 50us)")
+    ap.add_argument("--evals-threshold", type=float, default=0.25,
+                    help="relative evaluation-count growth that counts as "
+                         "a search-efficiency regression (default 0.25)")
     ap.add_argument("--schema-only", action="store_true",
                     help="validate structure + statuses only; never "
                          "report timing regressions")
@@ -197,7 +234,8 @@ def main(argv=None) -> int:
               f"({len(cur.get('sections', {}))} sections)")
         return OK
 
-    code, messages = compare(base, cur, args.threshold, args.min_us)
+    code, messages = compare(base, cur, args.threshold, args.min_us,
+                             evals_threshold=args.evals_threshold)
     if not args.quiet or code != OK:
         for m in messages:
             print(m, file=sys.stderr if code else sys.stdout)

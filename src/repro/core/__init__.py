@@ -8,7 +8,8 @@ Public API surface (the CLTune analogue):
     from repro.core import make_strategy, TPU_V5E
 """
 
-from .cache import CacheEntry, TuningCache, default_cache
+from .cache import (CacheEntry, TuningCache, default_cache, shape_distance,
+                    split_key)
 from .engine import EngineConfig, EngineStats, EvaluationEngine
 from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
                          Measurement, TPUAnalyticalEvaluator,
@@ -23,19 +24,20 @@ from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
 from .registry import (REGISTRY, AutotunePolicy, KernelRegistry,
                        TunableKernel, default_policy, lookup, resolve,
-                       tunable)
+                       transfer_config, tunable)
 from .space import Config, Constraint, Parameter, SearchSpace
 from .strategies import (AskTellDriver, Evolutionary, FullSearch,
                          GreedyCoordinateDescent, ParticleSwarm,
                          RandomSearch, SearchResult, SequentialAskTell,
                          SimulatedAnnealing, Strategy, Trial,
                          available_strategies, make_strategy,
-                         register_strategy)
+                         register_strategy, usable_seeds)
 from .tuner import Tuner, TuningOutcome
 from .verify import VerificationError, assert_trees_close, trees_close
 
 __all__ = [
-    "CacheEntry", "TuningCache", "default_cache",
+    "CacheEntry", "TuningCache", "default_cache", "shape_distance",
+    "split_key",
     "EngineConfig", "EngineStats", "EvaluationEngine",
     "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
     "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
@@ -47,13 +49,14 @@ __all__ = [
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",
     "REGISTRY", "AutotunePolicy", "KernelRegistry", "TunableKernel",
-    "default_policy", "lookup", "resolve", "tunable",
+    "default_policy", "lookup", "resolve", "transfer_config", "tunable",
     "Config", "Constraint", "Parameter", "SearchSpace",
     "AskTellDriver", "Evolutionary", "FullSearch",
     "GreedyCoordinateDescent", "ParticleSwarm", "RandomSearch",
     "SearchResult", "SequentialAskTell", "SimulatedAnnealing",
     "Strategy", "Trial",
     "available_strategies", "make_strategy", "register_strategy",
+    "usable_seeds",
     "Tuner", "TuningOutcome",
     "VerificationError", "assert_trees_close", "trees_close",
 ]

@@ -5,6 +5,18 @@ implies a database of best-found configurations keyed by kernel, input shape
 and device.  This is that database: a JSON file the framework consults at
 run time (``kernels/*/ops.py`` look tuned block sizes up here) and that the
 tuner writes into after a search.
+
+Cache format v2:
+
+* keys are ``kernel|shape_key|profile`` with ``\\`` and ``|`` *escaped*
+  inside each field, so a user ``shape_key`` containing ``|`` (the
+  sharding tuner's does) can neither collide with another entry nor
+  produce an unparseable key.  Legacy v1 keys (raw ``|`` joins) are
+  migrated on load.
+* entries carry an optional structured ``shape`` dict (the problem
+  dimensions the entry was tuned for), which powers nearest-shape config
+  transfer (:meth:`TuningCache.nearest`).  Entries written before v2
+  simply lack the field and load with ``shape=None``.
 """
 
 from __future__ import annotations
@@ -17,7 +29,7 @@ import os
 import tempfile
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 log = logging.getLogger("repro.cache")
 
@@ -33,8 +45,94 @@ def _default_path() -> str:
     return os.environ.get(_ENV_VAR) or _DEFAULT_PATH
 
 
+# -- key encoding -------------------------------------------------------------
+
+def _escape_field(field: str) -> str:
+    """Escape the key separator (and the escape char itself) in one field."""
+    return field.replace("\\", "\\\\").replace("|", "\\|")
+
+
 def _key(kernel: str, shape_key: str, profile: str) -> str:
-    return f"{kernel}|{shape_key}|{profile}"
+    return "|".join(_escape_field(f) for f in (kernel, shape_key, profile))
+
+
+def split_key(key: str) -> List[str]:
+    """Split a cache key on unescaped ``|``, undoing field escaping."""
+    fields: List[str] = []
+    cur: List[str] = []
+    i = 0
+    while i < len(key):
+        c = key[i]
+        if c == "\\" and i + 1 < len(key):
+            cur.append(key[i + 1])
+            i += 2
+        elif c == "|":
+            fields.append("".join(cur))
+            cur = []
+            i += 1
+        else:
+            cur.append(c)
+            i += 1
+    fields.append("".join(cur))
+    return fields
+
+
+def _migrate_key(key: str) -> Optional[str]:
+    """Re-encode a legacy (v1) raw-join key; None = already canonical.
+
+    v1 joined ``kernel|shape_key|profile`` without escaping, so a shape
+    key containing ``|`` produced a key that splits into more than three
+    fields.  The kernel name is the first field and the profile the last
+    (neither may contain ``|``); everything in between is the shape key.
+    A legacy key never contains ``\\|``/``\\\\`` sequences, so three-field
+    keys are byte-identical in both formats and need no migration.
+    """
+    if "\\" in key:
+        return None                      # already v2-escaped
+    parts = key.split("|")
+    if len(parts) <= 3:
+        return None
+    return _key(parts[0], "|".join(parts[1:-1]), parts[-1])
+
+
+# -- shape distance -----------------------------------------------------------
+
+def _numeric_dims(shape: Mapping[str, Any]) -> Dict[str, float]:
+    return {d: float(v) for d, v in shape.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def shape_distance(a: Mapping[str, Any], b: Mapping[str, Any]) -> float:
+    """Log-space distance between two problem-shape dicts.
+
+    Euclidean distance over the logs of the shared numeric dimensions
+    (matrix sizes are scale-quantities: 1024→2048 should be as far as
+    512→1024).  Non-numeric shared dimensions (dtype, causal, ...) must
+    match exactly — a tuned config for a different dtype is not a
+    neighbour.  Dimensions present in only one shape each add a fixed
+    penalty so same-family shapes always rank first.  ``inf`` = not
+    comparable.
+    """
+    num_a, num_b = _numeric_dims(a), _numeric_dims(b)
+    # a dim only counts as numeric when it is numeric in BOTH shapes; a
+    # dim numeric on one side and categorical on the other (int 1 vs
+    # bool False) falls through to the exact-match rule below
+    shared = [d for d in num_a if d in num_b]
+    if not shared:
+        return math.inf
+    dist2 = 0.0
+    for d in a.keys() & b.keys():
+        if d in shared:
+            va, vb = num_a[d], num_b[d]
+            if va <= 0 or vb <= 0:
+                if va != vb:             # non-positive dims: exact match only
+                    return math.inf
+                continue
+            dist2 += (math.log(va) - math.log(vb)) ** 2
+        elif a[d] != b[d]:
+            return math.inf
+    unshared = len(set(a) ^ set(b))
+    return math.sqrt(dist2) + unshared
 
 
 @dataclasses.dataclass
@@ -44,13 +142,29 @@ class CacheEntry:
     strategy: str
     evaluations: int
     timestamp: float
+    #: structured problem dimensions this entry was tuned for (v2); None on
+    #: entries written before the field existed — those can be looked up by
+    #: exact key but cannot participate in nearest-shape transfer
+    shape: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d.get("shape") is None:
+            del d["shape"]               # keep legacy entries byte-stable
+        return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CacheEntry":
-        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+        # tolerate missing optional fields: v1 files carry no ``shape``
+        kwargs = {}
+        for f in dataclasses.fields(cls):
+            if f.name in d:
+                kwargs[f.name] = d[f.name]
+            elif f.default is dataclasses.MISSING:
+                raise KeyError(f.name)
+            else:
+                kwargs[f.name] = f.default
+        return cls(**kwargs)
 
 
 class TuningCache:
@@ -90,6 +204,18 @@ class TuningCache:
                    and not math.isfinite(v["time_s"])]
             for k in bad:
                 log.warning("cache: dropping legacy non-finite entry %r", k)
+                del data[k]
+            # v1 keys joined fields with raw "|": a shape_key containing
+            # the separator is unparseable (and can collide with a v2
+            # escaped key), so re-encode it under the escaped form
+            for k in [k for k in data if _migrate_key(k) is not None]:
+                new = _migrate_key(k)
+                if new in data:
+                    log.warning("cache: legacy key %r collides with %r; "
+                                "keeping the existing entry", k, new)
+                else:
+                    log.info("cache: migrating legacy key %r -> %r", k, new)
+                    data[new] = data[k]
                 del data[k]
             self._data = data
         self._loaded = True
@@ -149,16 +275,48 @@ class TuningCache:
 
     def record(self, kernel: str, shape_key: str, profile: str,
                config: Dict[str, Any], time_s: float, strategy: str,
-               evaluations: int) -> bool:
+               evaluations: int,
+               shape: Optional[Mapping[str, Any]] = None) -> bool:
         """Record a tuning winner; refuses non-finite times (a failed tune
-        must never poison the cache other tools parse)."""
+        must never poison the cache other tools parse).  ``shape`` is the
+        structured problem-dimension dict that makes the entry eligible
+        for nearest-shape transfer."""
         if not math.isfinite(time_s):
             log.warning("cache: refusing to record non-finite time_s=%r "
                         "for kernel=%r shape=%r", time_s, kernel, shape_key)
             return False
         return self.put(kernel, shape_key, profile, CacheEntry(
             config=config, time_s=time_s, strategy=strategy,
-            evaluations=evaluations, timestamp=time.time()))
+            evaluations=evaluations, timestamp=time.time(),
+            shape=dict(shape) if shape is not None else None))
+
+    # -- shape transfer --------------------------------------------------------
+    def nearest(self, kernel: str, shape: Mapping[str, Any], profile: str,
+                k: int = 3) -> List[CacheEntry]:
+        """The ``k`` tuned entries for (kernel, profile) nearest to ``shape``.
+
+        Ordered by :func:`shape_distance` (log-space over shared numeric
+        dims), nearest first; an exact-shape entry sorts first with
+        distance 0.  Entries without a structured ``shape`` (pre-v2) and
+        entries at infinite distance (no shared dims / mismatched
+        non-numeric dims) are excluded.
+        """
+        with self._lock:
+            self._ensure_loaded()
+            snapshot = dict(self._data)
+        scored: List[Tuple[float, str, CacheEntry]] = []
+        for key, raw in snapshot.items():
+            fields = split_key(key)
+            if len(fields) != 3 or fields[0] != kernel or fields[2] != profile:
+                continue
+            entry = CacheEntry.from_json(raw)
+            if entry.shape is None:
+                continue
+            d = shape_distance(shape, entry.shape)
+            if math.isfinite(d):
+                scored.append((d, key, entry))
+        scored.sort(key=lambda t: (t[0], t[1]))
+        return [entry for _, _, entry in scored[:max(0, k)]]
 
     def clear(self, delete_file: bool = False) -> None:
         """Drop all in-memory entries; optionally unlink the backing file."""

@@ -53,7 +53,7 @@ from .evaluators import Evaluator, KernelSpec, Measurement
 from .failures import (CircuitBreakerTripped, CompileError, FailureRecord,
                        RetryPolicy, summarize_failures)
 from .space import Config, SearchSpace
-from .strategies import SearchResult, Strategy, Trial
+from .strategies import SearchResult, Strategy, Trial, accepts_kwarg
 
 
 def _default_workers() -> int:
@@ -339,13 +339,25 @@ class EvaluationEngine:
 
     # -- the run loop --------------------------------------------------------
     def run(self, strategy: Strategy, budget: Optional[int],
-            seed: int = 0) -> SearchResult:
+            seed: int = 0,
+            seeds: Optional[List[Config]] = None) -> SearchResult:
+        """Run one search.  ``seeds`` are warm-start candidates (transferred
+        nearest-shape winners, heuristics) handed to the strategy's driver;
+        infeasible seeds are dropped there, and a seedless call is
+        byte-identical to the pre-warm-start behaviour."""
         cfg = self.config
         t_run0 = time.perf_counter()
+        kwargs: Dict[str, Any] = {"seed": seed}
         if cfg.batching:
-            driver = strategy.asktell(self.space, budget, seed=seed)
+            # user strategies may override asktell with the pre-warm-start
+            # signature; their searches simply run cold
+            if seeds and accepts_kwarg(strategy.asktell, "seeds"):
+                kwargs["seeds"] = seeds
+            driver = strategy.asktell(self.space, budget, **kwargs)
         else:   # force the sequential fallback regardless of strategy type
-            driver = Strategy.asktell(strategy, self.space, budget, seed=seed)
+            if seeds:
+                kwargs["seeds"] = seeds     # base asktell always takes them
+            driver = Strategy.asktell(strategy, self.space, budget, **kwargs)
         pool = (ThreadPoolExecutor(max_workers=cfg.workers,
                                    thread_name_prefix="engine-compile")
                 if cfg.workers > 1 else None)

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import inspect
 import logging
 import os
 from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
@@ -45,9 +44,11 @@ from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
 
 import numpy as np
 
-from .cache import TuningCache, default_cache
+from .cache import CacheEntry, TuningCache, default_cache
+from .failures import EvaluationError
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config, SearchSpace
+from .strategies import accepts_kwarg, usable_seeds
 
 log = logging.getLogger("repro.registry")
 
@@ -57,13 +58,18 @@ Shape = Mapping[str, Any]
 class AutotunePolicy(enum.Enum):
     """What :func:`lookup` does when the cache has no entry for a shape.
 
-    * ``OFF``     — cache hit or the declared heuristic; never tunes.
-    * ``ON_MISS`` — cache hit, else run a (budgeted) search once, record it,
-                    and return the winner; the KTT-style dynamic mode.
-    * ``ALWAYS``  — re-tune on every call (benchmarking / device bring-up).
+    * ``OFF``      — cache hit or the declared heuristic; never tunes.
+    * ``TRANSFER`` — cache hit, else the nearest tuned shape's config
+                     (feasibility-checked against the new shape's space),
+                     else the heuristic; never runs a search.  The serving
+                     mode: an unseen decode shape must not stall on tuning.
+    * ``ON_MISS``  — cache hit, else run a (budgeted) search once, record it,
+                     and return the winner; the KTT-style dynamic mode.
+    * ``ALWAYS``   — re-tune on every call (benchmarking / device bring-up).
     """
 
     OFF = "off"
+    TRANSFER = "transfer"
     ON_MISS = "on_miss"
     ALWAYS = "always"
 
@@ -86,13 +92,18 @@ def default_policy() -> AutotunePolicy:
     return AutotunePolicy.coerce(os.environ.get("REPRO_AUTOTUNE", "off"))
 
 
-def _accepts(fn: Callable, kwarg: str) -> bool:
-    try:
-        params = inspect.signature(fn).parameters
-    except (TypeError, ValueError):    # builtins / C callables
-        return False
-    return kwarg in params or any(
-        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+def _escape_dim(field: str) -> str:
+    """Escape the default shape key's separators inside a name or value.
+
+    The old ``f"{name}{value}"`` form was ambiguous (``{"X": 12}`` and
+    ``{"X1": 2}`` both produced ``X12``); ``name=value`` joined with ``_``
+    is unambiguous once ``=``/``_`` occurring *inside* a field are escaped.
+    """
+    return (field.replace("\\", "\\\\").replace("=", "\\=")
+            .replace("_", "\\_"))
+
+
+_accepts = accepts_kwarg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +148,16 @@ class TunableKernel:
     def key_for(self, shape: Shape) -> str:
         if self.shape_key is not None:
             return self.shape_key(shape)
+        return "_".join(f"{_escape_dim(k)}={_escape_dim(str(shape[k]))}"
+                        for k in sorted(shape))
+
+    def legacy_key_for(self, shape: Shape) -> Optional[str]:
+        """The pre-v2 default shape key (ambiguous ``f"{name}{value}"``
+        join), so :func:`lookup` can find — and re-key — entries recorded
+        before the escaped ``name=value`` form.  None for kernels with a
+        declared ``shape_key`` (their key format never changed)."""
+        if self.shape_key is not None:
+            return None
         return "_".join(f"{k}{shape[k]}" for k in sorted(shape))
 
     def make_space(self, shape: Shape, extended: bool = False) -> SearchSpace:
@@ -271,46 +292,146 @@ def tunable(name: str, *, space: Callable[..., SearchSpace],
     return deco
 
 
+def _migrate_legacy_entry(k: TunableKernel, shape: Shape, key: str,
+                          profile: DeviceProfile,
+                          cache: TuningCache) -> Optional[CacheEntry]:
+    """Find an entry recorded under the pre-v2 *default* shape-key format
+    (the ambiguous ``f"{name}{value}"`` join) and re-key it in place, so
+    tuned configs from older cache files keep resolving after the key-
+    format fix.  Kernels with a declared ``shape_key`` are unaffected."""
+    legacy = k.legacy_key_for(shape)
+    if legacy is None or legacy == key:
+        return None
+    entry = cache.get(k.name, legacy, profile.name)
+    if entry is None:
+        return None
+    log.info("cache: migrating legacy shape key %r -> %r for kernel %s",
+             legacy, key, k.name)
+    cache.put(k.name, key, profile.name, entry, only_if_better=False)
+    return entry
+
+
+def _validated_heuristic(k: TunableKernel, shape: Shape) -> Config:
+    """The declared heuristic, feasibility-checked against its own space.
+
+    A heuristic that violates the space's constraints is a declaration bug
+    (it would never survive a search), but the heuristic is also the
+    universal never-crash fallback — so the violation is *logged*, not
+    raised, and the config is returned regardless.
+    """
+    cfg = dict(k.heuristic(shape))
+    try:
+        space = k.make_space(shape)
+        feasible = space.is_feasible(cfg)
+        violated = None if feasible else space.violated(cfg)
+    except Exception as e:  # noqa: BLE001 — validation is advisory
+        log.debug("heuristic validation skipped for %s (%s: %s)",
+                  k.name, type(e).__name__, e)
+        return cfg
+    if not feasible:
+        log.warning("heuristic config for %s shape=%s violates its own "
+                    "space constraints %s: %s", k.name, dict(shape),
+                    violated, cfg)
+    return cfg
+
+
+def transfer_config(k: TunableKernel, shape: Shape, *,
+                    profile: DeviceProfile = TPU_V5E,
+                    cache: Optional[TuningCache] = None,
+                    k_nearest: int = 3
+                    ) -> Optional[Tuple[Config, CacheEntry]]:
+    """Nearest tuned shape's config, feasibility-checked for ``shape``.
+
+    Walks the ``k_nearest`` closest cached entries (log-space shape
+    distance) and returns the first whose config is feasible in the *new*
+    shape's search space, plus the source entry — block sizes tuned for
+    ``M=1024`` may not divide ``M=1536``, so an unchecked transfer could
+    hand the call site a config the kernel cannot build.  None = nothing
+    transferable.
+    """
+    cache = cache if cache is not None else default_cache()
+    candidates = cache.nearest(k.name, dict(shape), profile.name, k=k_nearest)
+    if not candidates:
+        return None
+    space = k.make_space(dict(shape))
+    for entry in candidates:
+        # same sanitation as warm-start seeding: project onto this space's
+        # parameters, require in-list values and constraint feasibility —
+        # a config tuned on an extended/older space layout must not leak
+        # out-of-space values to a call site that will build with them
+        usable = usable_seeds(space, [entry.config])
+        if usable:
+            return usable[0], entry
+        log.info("transfer: rejecting config tuned for %s (infeasible for "
+                 "%s): %s", entry.shape, dict(shape), dict(entry.config))
+    return None
+
+
 def lookup(kernel: "TunableKernel | str", shape: Shape, *,
            profile: DeviceProfile = TPU_V5E,
            cache: Optional[TuningCache] = None,
            policy: "AutotunePolicy | str | None" = None,
            registry: Optional[KernelRegistry] = None,
+           transfer: "bool | int | None" = None,
            **tune_kwargs) -> Config:
     """Resolve the configuration to run ``kernel`` with for ``shape``.
 
-    Resolution order: tuned-cache hit -> (policy permitting) one-shot tune
-    recorded back into the cache -> the kernel's declared heuristic.  This is
-    the single code path behind every public op's ``config=None`` default.
-    ``tune_kwargs`` (strategy/budget/evaluator/seed/...) flow to
-    ``repro.tune.api.tune_kernel`` when a search actually runs.
+    Resolution order: tuned-cache hit -> (policy permitting) nearest-shape
+    config transfer -> (policy permitting) one-shot tune recorded back into
+    the cache -> the kernel's declared heuristic.  This is the single code
+    path behind every public op's ``config=None`` default.
+
+    ``transfer`` sizes the nearest-neighbour pool consulted by the
+    ``TRANSFER`` policy and by ``ON_MISS``/``ALWAYS`` warm starting
+    (int = k nearest; True = default 3; False = disable transfer/warm
+    start entirely).  ``tune_kwargs`` (strategy/budget/evaluator/seed/...)
+    flow to ``repro.tune.api.tune_kernel`` when a search actually runs.
     """
     k = resolve(kernel, registry)
     cache = cache if cache is not None else default_cache()
     pol = AutotunePolicy.coerce(policy)
     shape = dict(shape)
     key = k.key_for(shape)
+    # NB: `is` checks — `transfer=1` means k=1, but `1 in (None, True)`
+    # would be True under ==
+    k_nearest = 3 if (transfer is None or transfer is True) else int(transfer)
 
     if pol is not AutotunePolicy.ALWAYS:
         entry = cache.get(k.name, key, profile.name)
+        if entry is None:
+            entry = _migrate_legacy_entry(k, shape, key, profile, cache)
         if entry is not None:
             return dict(entry.config)
         if pol is AutotunePolicy.OFF:
-            return dict(k.heuristic(shape))
+            return _validated_heuristic(k, shape)
+        if pol is AutotunePolicy.TRANSFER:
+            moved = (transfer_config(k, shape, profile=profile, cache=cache,
+                                     k_nearest=k_nearest)
+                     if k_nearest > 0 else None)
+            if moved is not None:
+                cfg, src = moved
+                log.info("transfer: %s %s <- config tuned for %s",
+                         k.name, key, src.shape)
+                return cfg
+            return _validated_heuristic(k, shape)
 
-    # tune-on-miss / always: run the generic one-shot search.  A shape the
-    # declared space cannot cover (e.g. tiny decode batches) must not crash
-    # the call site — the heuristic is the universal fallback.
+    # tune-on-miss / always: run the generic one-shot search, warm-started
+    # from the nearest tuned shapes.  A shape the declared space cannot
+    # cover (e.g. an empty feasible set for tiny decode batches) must not
+    # crash the call site — the heuristic is the universal fallback.  But
+    # only *search* failures are swallowed: a programming error in the
+    # kernel's declaration (TypeError in its space fn, ...) re-raises.
     from ..tune.api import tune_kernel   # late: tune layers above core
     log.info("autotune (%s): kernel=%s shape=%s", pol.value, k.name, key)
     tune_kwargs.setdefault("record", True)
+    tune_kwargs.setdefault("warm_start", k_nearest)
     try:
         outcome = tune_kernel(k, shape, profile=profile, cache=cache,
                               **tune_kwargs)
-    except Exception as e:  # noqa: BLE001 — infeasible space / search error
+    except (EvaluationError, ValueError) as e:
         log.warning("autotune failed for %s %s (%s); using heuristic",
                     k.name, key, e)
-        return dict(k.heuristic(shape))
+        return _validated_heuristic(k, shape)
     if outcome.best_config is not None:
         return dict(outcome.best_config)
-    return dict(k.heuristic(shape))
+    return _validated_heuristic(k, shape)

@@ -14,16 +14,77 @@ return ``math.inf`` and are recorded but never become the incumbent.
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import logging
 import math
 import queue
 import random
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .failures import FailureRecord, summarize_failures
 from .space import Config, SearchSpace
 
+log = logging.getLogger("repro.strategies")
+
 Objective = Callable[[Config], float]
+
+
+def accepts_kwarg(fn: Callable, kwarg: str) -> bool:
+    """Whether ``fn`` can take ``kwarg`` — shared signature introspection
+    for optional-capability probes (seeds support, extended spaces, ...)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):    # builtins / C callables
+        return False
+    return kwarg in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+def usable_seeds(space: SearchSpace, seeds: Optional[Sequence[Config]],
+                 limit: Optional[int] = None) -> List[Config]:
+    """Sanitize warm-start seed configs for one search.
+
+    Seeds come from *other* shapes' tuned winners and declared heuristics,
+    so each is projected onto this space's parameters (a seed missing a
+    parameter, or carrying a value outside the parameter's list, is
+    dropped), checked for feasibility, and deduplicated; ``limit`` caps
+    how many survive (a seed list must never exhaust the search budget).
+    """
+    out: List[Config] = []
+    seen = set()
+    for seed in seeds or ():
+        try:
+            cfg = {p.name: seed[p.name] for p in space.parameters}
+            space.to_indices(cfg)           # value outside the list raises
+            key = space.config_key(cfg)
+            feasible = space.is_feasible(cfg)
+        except (KeyError, ValueError):
+            continue
+        if not feasible or key in seen:
+            continue
+        seen.add(key)
+        out.append(cfg)
+        if limit is not None and len(out) >= limit:
+            break
+    return out
+
+
+def _sample_avoiding(space: SearchSpace, rng: random.Random, count: int,
+                     exclude: Sequence[Config]) -> List[Config]:
+    """``sample_unique`` that skips already-seeded configs.
+
+    With no exclusions this is exactly ``sample_unique(rng, count)`` — the
+    seedless trial sequence is unchanged.
+    """
+    if count <= 0:
+        return []
+    if not exclude:
+        return space.sample_unique(rng, count)
+    banned = {space.config_key(c) for c in exclude}
+    drawn = space.sample_unique(rng, count + len(banned))
+    fresh = [c for c in drawn if space.config_key(c) not in banned]
+    return fresh[:count]
 
 
 @dataclasses.dataclass
@@ -121,29 +182,43 @@ class _Recorder:
 class Strategy:
     """Base class; subclasses implement ``run``.
 
+    ``run``/``asktell`` accept optional warm-start ``seeds``: sanitized
+    initial candidates (transferred nearest-shape winners, heuristics)
+    evaluated before — or, for population strategies, as part of — the
+    strategy's own exploration.  Seeds consume search budget like any
+    other evaluation.
+
     ``asktell`` is the batch interface consumed by
     :class:`repro.core.engine.EvaluationEngine`: generation-based
     strategies override it with native batched drivers, everything else
-    inherits a sequential fallback that wraps ``run`` unchanged.
+    inherits a sequential fallback that wraps ``run`` unchanged
+    (forwarding ``seeds`` when the strategy's ``run`` accepts them).
     """
 
     name = "base"
 
     def run(self, space: SearchSpace, objective: Objective,
-            budget: int, seed: int = 0) -> SearchResult:
+            budget: int, seed: int = 0,
+            seeds: Optional[Sequence[Config]] = None) -> SearchResult:
         raise NotImplementedError
 
     def asktell(self, space: SearchSpace, budget: Optional[int],
-                seed: int = 0) -> "AskTellDriver":
-        return SequentialAskTell(self, space, budget, seed=seed)
+                seed: int = 0,
+                seeds: Optional[Sequence[Config]] = None) -> "AskTellDriver":
+        return SequentialAskTell(self, space, budget, seed=seed, seeds=seeds)
 
 
 class FullSearch(Strategy):
-    """Exhaustive enumeration of every feasible configuration."""
+    """Exhaustive enumeration of every feasible configuration.
+
+    Warm-start seeds are meaningless here (every feasible config is
+    visited anyway) and are ignored.
+    """
 
     name = "full"
 
-    def run(self, space, objective, budget=None, seed=0) -> SearchResult:
+    def run(self, space, objective, budget=None, seed=0,
+            seeds=None) -> SearchResult:
         rec = _Recorder(space, objective)
         for i, cfg in enumerate(space):
             if budget is not None and i >= budget:
@@ -151,31 +226,40 @@ class FullSearch(Strategy):
             rec.evaluate(cfg)
         return SearchResult(self.name, rec.trials, rec.best, rec.evaluations)
 
-    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
+    def asktell(self, space, budget, seed=0, seeds=None) -> "AskTellDriver":
         return _FullSearchAskTell(self, space, budget)
 
 
 class RandomSearch(Strategy):
-    """Uniform sampling of a configurable fraction of the space."""
+    """Uniform sampling of a configurable fraction of the space.
+
+    Warm-start seeds are evaluated first and count toward the budget; the
+    random sample fills the remainder (seeds excluded from re-draws).
+    """
 
     name = "random"
 
-    def run(self, space, objective, budget, seed=0) -> SearchResult:
+    def run(self, space, objective, budget, seed=0,
+            seeds=None) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
-        samples = space.sample_unique(rng, budget)
+        seeds = usable_seeds(space, seeds, limit=budget)
+        for cfg in seeds:
+            rec.evaluate(cfg)
+        samples = _sample_avoiding(space, rng, budget - len(seeds), seeds)
         for cfg in samples:
             rec.evaluate(cfg)
         extra: Dict[str, object] = {}
-        if len(samples) < budget:
+        if rec.evaluations < budget:
             # the feasible space is smaller than the budget: surface the
             # shortfall instead of silently under-spending
-            extra["sample_shortfall"] = budget - len(samples)
+            extra["sample_shortfall"] = budget - rec.evaluations
         return SearchResult(self.name, rec.trials, rec.best, rec.evaluations,
                             extra=extra)
 
-    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
-        return _RandomSearchAskTell(self, space, budget, seed=seed)
+    def asktell(self, space, budget, seed=0, seeds=None) -> "AskTellDriver":
+        return _RandomSearchAskTell(self, space, budget, seed=seed,
+                                    seeds=seeds)
 
 
 class SimulatedAnnealing(Strategy):
@@ -204,16 +288,28 @@ class SimulatedAnnealing(Strategy):
         self.neighbour_mode = neighbour_mode
         self.restart_on_dead_end = restart_on_dead_end
 
-    def run(self, space, objective, budget, seed=0) -> SearchResult:
+    def run(self, space, objective, budget, seed=0,
+            seeds=None) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
-        current = space.sample(rng)
-        t_cur = rec.evaluate(current)
+        # Warm start: evaluate every seed, then walk from the best of them
+        # (transferred nearest-shape winners put the walk straight into a
+        # good basin).  Without seeds the walk starts at a random sample,
+        # exactly as before.
+        current, t_cur = None, math.inf
+        for cfg in usable_seeds(space, seeds, limit=budget):
+            t = rec.evaluate(cfg)
+            if current is None or t < t_cur:
+                current, t_cur = cfg, t
+        if current is None:
+            current = space.sample(rng)
+            t_cur = rec.evaluate(current)
         # Temperature scale: the first *finite* measurement, refreshed on
         # dead-end restarts.  Seeding it from an inf (failed) first eval —
         # or keeping a stale basin's scale after a restart — mis-sizes
         # every subsequent acceptance probability.
-        scale = t_cur if math.isfinite(t_cur) and t_cur > 0 else None
+        scale = next((t.time for t in rec.trials
+                      if math.isfinite(t.time) and t.time > 0), None)
         accepted_worse = 0
         while rec.evaluations < budget:
             nbr = space.random_neighbour(current, rng, mode=self.neighbour_mode)
@@ -292,11 +388,15 @@ class ParticleSwarm(Strategy):
                 return new
         return space.sample(rng)    # repair failed: rerandomise the particle
 
-    def run(self, space, objective, budget, seed=0) -> SearchResult:
+    def run(self, space, objective, budget, seed=0,
+            seeds=None) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
         n = self.swarm_size
-        xs = [space.sample(rng) for _ in range(n)]
+        # Warm start: the first particles spawn at the seed configs, the
+        # rest randomly — the swarm explores around transferred winners.
+        planted = usable_seeds(space, seeds, limit=n)
+        xs = planted + [space.sample(rng) for _ in range(n - len(planted))]
         ts = [rec.evaluate(x) for x in xs]
         p_best = list(xs)
         p_time = list(ts)
@@ -318,8 +418,9 @@ class ParticleSwarm(Strategy):
                             extra={"particle_traces": particle_traces,
                                    "swarm_size": n})
 
-    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
-        return _ParticleSwarmAskTell(self, space, budget, seed=seed)
+    def asktell(self, space, budget, seed=0, seeds=None) -> "AskTellDriver":
+        return _ParticleSwarmAskTell(self, space, budget, seed=seed,
+                                     seeds=seeds)
 
 
 class GreedyCoordinateDescent(Strategy):
@@ -331,11 +432,19 @@ class GreedyCoordinateDescent(Strategy):
 
     name = "greedy"
 
-    def run(self, space, objective, budget, seed=0) -> SearchResult:
+    def run(self, space, objective, budget, seed=0,
+            seeds=None) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
-        current = space.sample(rng)
-        t_cur = rec.evaluate(current)
+        # Warm start: descend from the best seed instead of a random point
+        current, t_cur = None, math.inf
+        for cfg in usable_seeds(space, seeds, limit=budget):
+            t = rec.evaluate(cfg)
+            if current is None or t < t_cur:
+                current, t_cur = cfg, t
+        if current is None:
+            current = space.sample(rng)
+            t_cur = rec.evaluate(current)
         while rec.evaluations < budget:
             improved = False
             for param in space.parameters:
@@ -390,10 +499,15 @@ class Evolutionary(Strategy):
                 return child
         return space.sample(rng)
 
-    def run(self, space, objective, budget, seed=0) -> SearchResult:
+    def run(self, space, objective, budget, seed=0,
+            seeds=None) -> SearchResult:
         rng = random.Random(seed)
         rec = _Recorder(space, objective)
-        pop = [space.sample(rng) for _ in range(self.population)]
+        # Warm start: seeds join generation 0 (elitism then carries the
+        # best transferred config forward until something beats it)
+        planted = usable_seeds(space, seeds, limit=self.population)
+        pop = planted + [space.sample(rng)
+                         for _ in range(self.population - len(planted))]
         fit = [rec.evaluate(x) for x in pop]
 
         def tourney() -> Config:
@@ -416,8 +530,9 @@ class Evolutionary(Strategy):
                             rec.evaluations,
                             extra={"population": self.population})
 
-    def asktell(self, space, budget, seed=0) -> "AskTellDriver":
-        return _EvolutionaryAskTell(self, space, budget, seed=seed)
+    def asktell(self, space, budget, seed=0, seeds=None) -> "AskTellDriver":
+        return _EvolutionaryAskTell(self, space, budget, seed=seed,
+                                    seeds=seeds)
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +581,8 @@ class SequentialAskTell(AskTellDriver):
     """
 
     def __init__(self, strategy: Strategy, space: SearchSpace,
-                 budget: Optional[int], seed: int = 0):
+                 budget: Optional[int], seed: int = 0,
+                 seeds: Optional[Sequence[Config]] = None):
         self.strategy = strategy
         self._requests: "queue.Queue[Optional[Config]]" = queue.Queue(1)
         self._responses: "queue.Queue[float]" = queue.Queue(1)
@@ -475,6 +591,16 @@ class SequentialAskTell(AskTellDriver):
         self._finished = False
         self._awaiting_tell = False
         self._aborted = False
+        run_kwargs: Dict[str, Any] = {"seed": seed}
+        if seeds:
+            # inject warm-start seeds into strategies whose run() takes
+            # them (annealing, greedy, any compliant user strategy); a
+            # legacy run() signature just searches cold
+            if accepts_kwarg(strategy.run, "seeds"):
+                run_kwargs["seeds"] = [dict(c) for c in seeds]
+            else:
+                log.debug("strategy %r ignores warm-start seeds",
+                          strategy.name)
 
         def _objective(config: Config) -> float:
             self._requests.put(dict(config))
@@ -483,7 +609,7 @@ class SequentialAskTell(AskTellDriver):
         def _run() -> None:
             try:
                 self._result = strategy.run(space, _objective, budget,
-                                            seed=seed)
+                                            **run_kwargs)
             except BaseException as e:  # noqa: BLE001 — surfaced on next ask
                 self._error = e
             finally:
@@ -606,14 +732,20 @@ def _require_budget(strategy: Strategy, budget: Optional[int]) -> int:
 
 
 class _RandomSearchAskTell(AskTellDriver):
-    """The whole random sample is one batch — maximally overlappable."""
+    """The whole random sample is one batch — maximally overlappable.
+
+    Warm-start seeds lead the batch; random draws fill the remainder.
+    """
 
     def __init__(self, strategy: RandomSearch, space: SearchSpace,
-                 budget: int, seed: int = 0):
+                 budget: int, seed: int = 0,
+                 seeds: Optional[Sequence[Config]] = None):
         budget = _require_budget(strategy, budget)
         self.strategy = strategy
         rng = random.Random(seed)
-        self._pending: List[Config] = space.sample_unique(rng, budget)
+        planted = usable_seeds(space, seeds, limit=budget)
+        self._pending: List[Config] = planted + _sample_avoiding(
+            space, rng, budget - len(planted), planted)
         self._shortfall = budget - len(self._pending)
         self._rec = _BatchRecorder()
 
@@ -644,14 +776,17 @@ class _ParticleSwarmAskTell(AskTellDriver):
     """
 
     def __init__(self, strategy: ParticleSwarm, space: SearchSpace,
-                 budget: int, seed: int = 0):
+                 budget: int, seed: int = 0,
+                 seeds: Optional[Sequence[Config]] = None):
         self.strategy = strategy
         self.space = space
         self.rng = random.Random(seed)
         self._budget = _require_budget(strategy, budget)
         self._rec = _BatchRecorder()
         n = strategy.swarm_size
-        self.xs = [space.sample(self.rng) for _ in range(n)]
+        planted = usable_seeds(space, seeds, limit=n)
+        self.xs = planted + [space.sample(self.rng)
+                             for _ in range(n - len(planted))]
         self.p_best = [dict(x) for x in self.xs]
         self.p_time = [math.inf] * n
         self.g_best: Optional[Config] = None
@@ -695,7 +830,8 @@ class _EvolutionaryAskTell(AskTellDriver):
     """Generation-batched GA: ask yields the next population's offspring."""
 
     def __init__(self, strategy: Evolutionary, space: SearchSpace,
-                 budget: int, seed: int = 0):
+                 budget: int, seed: int = 0,
+                 seeds: Optional[Sequence[Config]] = None):
         self.strategy = strategy
         self.space = space
         self.rng = random.Random(seed)
@@ -703,8 +839,10 @@ class _EvolutionaryAskTell(AskTellDriver):
         self._rec = _BatchRecorder()
         self.pop: List[Config] = []
         self.fit: List[float] = []
-        self._initial = [space.sample(self.rng)
-                         for _ in range(strategy.population)]
+        planted = usable_seeds(space, seeds, limit=strategy.population)
+        self._initial = planted + [
+            space.sample(self.rng)
+            for _ in range(strategy.population - len(planted))]
         self._elite: Optional[Tuple[Config, float]] = None
         self._asked: List[Config] = []
 

@@ -247,11 +247,16 @@ class Tuner:
              record_to_cache: bool = False,
              shape_key: str = "",
              engine: "EngineConfig | Dict[str, Any] | None" = None,
+             seeds: Optional[Sequence[Config]] = None,
              **strategy_kwargs) -> TuningOutcome:
         """Search the space; all evaluation flows through the
         :class:`~repro.core.engine.EvaluationEngine` (``engine`` takes an
         :class:`EngineConfig` or a kwargs dict for one; default engine =
-        batched drivers + compile pool, no pruning/speculation)."""
+        batched drivers + compile pool, no pruning/speculation).
+
+        ``seeds`` warm-start the search: the strategy evaluates these
+        configs first (infeasible ones are silently dropped), so a
+        transferred nearest-shape winner cuts evaluations-to-target."""
         if self._spec is None:
             raise ValueError("no kernel registered; call add_kernel first")
         if self.space.num_dimensions == 0:
@@ -275,7 +280,8 @@ class Tuner:
             engine = EngineConfig(**(engine or {}))
         eng = EvaluationEngine(self.evaluator, self._spec, self.space,
                                config=engine)
-        result = eng.run(strat, budget, seed=seed)
+        result = eng.run(strat, budget, seed=seed,
+                         seeds=[dict(s) for s in seeds] if seeds else None)
         for record in eng.failures.values():
             log.debug("config failed: %s", record)
         if result.extra.get("aborted"):
@@ -289,9 +295,13 @@ class Tuner:
             budget=budget, engine_stats=result.extra.get("engine"))
         if record_to_cache and result.best is not None:
             cache = self._cache if self._cache is not None else default_cache()
+            # from_tunable stashes the problem shape in the spec's meta; a
+            # fluent tuner has no structured shape and records without one
+            # (exact-key lookups work, nearest-shape transfer skips it)
+            shape = getattr(self, "_shape", None) or self._spec.meta or None
             cache.record(self._spec.name, shape_key or "default",
                          self.profile.name, result.best.config,
                          result.best.time, result.strategy,
-                         result.evaluations)
+                         result.evaluations, shape=shape)
             cache.save()
         return outcome

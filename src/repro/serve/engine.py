@@ -9,6 +9,7 @@ batching).  The decode step itself is the shared ``dist.step.make_serve_step``
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -28,11 +29,19 @@ def resolve_kernel_configs(cfg: ModelConfig, slots: int, max_len: int, *,
                            policy: "AutotunePolicy | str | None" = None
                            ) -> Dict[str, Dict[str, Any]]:
     """Kernel configurations this serving shape should run with, resolved
-    through the tunable-kernel registry (tuned cache -> heuristic, with
-    optional tune-on-miss).  Shape-keyed re-tuning is CLTune scenario 3:
-    the best block sizes depend on the serving geometry, so the engine asks
-    the registry instead of hard-coding them.
+    through the tunable-kernel registry.  Shape-keyed re-tuning is CLTune
+    scenario 3: the best block sizes depend on the serving geometry, so the
+    engine asks the registry instead of hard-coding them.
+
+    The serve-time default policy is ``TRANSFER``: an exact cache hit wins,
+    an unseen decode geometry borrows the nearest tuned shape's config
+    (feasibility-checked), and only then does the static heuristic apply —
+    a new serving shape never stalls the engine on a tuning search.  An
+    explicit ``REPRO_AUTOTUNE`` env setting still overrides this default
+    (pass ``policy=`` to pin the behaviour regardless).
     """
+    if policy is None and "REPRO_AUTOTUNE" not in os.environ:
+        policy = AutotunePolicy.TRANSFER
     out: Dict[str, Dict[str, Any]] = {}
     head_dim = cfg.resolved_head_dim
     if cfg.num_heads and head_dim and "flash_attention" in REGISTRY:

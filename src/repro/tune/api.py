@@ -33,6 +33,26 @@ from ..core.tuner import Tuner, TuningOutcome
 log = logging.getLogger("repro.tune")
 
 
+def warm_start_seeds(k: TunableKernel, shape: Shape, *,
+                     profile: DeviceProfile = TPU_V5E,
+                     cache: Optional[TuningCache] = None,
+                     k_nearest: int = 3) -> List[Dict[str, Any]]:
+    """Warm-start candidates for tuning ``k`` at ``shape``: the configs of
+    the ``k_nearest`` closest tuned shapes in the cache (nearest first),
+    then the declared heuristic.  Feasibility filtering happens in the
+    strategy layer — a block size tuned for another shape may not divide
+    this one."""
+    cache = cache if cache is not None else default_cache()
+    seeds = [dict(e.config)
+             for e in cache.nearest(k.name, dict(shape), profile.name,
+                                    k=k_nearest)]
+    try:
+        seeds.append(dict(k.heuristic(dict(shape))))
+    except Exception as e:  # noqa: BLE001 — a broken heuristic is no seed
+        log.debug("warm start: heuristic for %s failed (%s)", k.name, e)
+    return seeds
+
+
 def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 strategy: Optional[str] = None,
                 budget: Optional[int] = None,
@@ -44,18 +64,26 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 interpret: bool = True,
                 extended_space: Optional[bool] = None,
                 engine: "EngineConfig | Dict[str, Any] | None" = None,
+                warm_start: "bool | int | None" = None,
+                seeds: Optional[List[Dict[str, Any]]] = None,
                 **strategy_kwargs) -> TuningOutcome:
     """Tune one registered kernel for one concrete shape.
 
     Strategy and budget default to the kernel's declared ``defaults`` and
     fall back to annealing with the Tuner's clamped 1/32-of-space budget.
     With ``record=True`` the winner lands in the tuned-config cache under
-    the kernel's ``shape_key``, where :func:`repro.core.registry.lookup`
-    (and hence every public op) finds it.  ``engine`` configures the
-    parallel evaluation engine (worker-pool width, early-stop pruning,
-    speculative prefetch); the resulting
+    the kernel's ``shape_key`` — together with the structured ``shape``
+    dict that makes it transferable — where
+    :func:`repro.core.registry.lookup` (and hence every public op) finds
+    it.  ``engine`` configures the parallel evaluation engine (worker-pool
+    width, early-stop pruning, speculative prefetch); the resulting
     :attr:`~repro.core.tuner.TuningOutcome.engine_stats` records what the
     engine saved.
+
+    ``warm_start`` seeds the search from the nearest tuned shapes already
+    in the cache plus the declared heuristic (int = how many neighbours;
+    True = 3; False/0 = search cold; default on).  Explicit ``seeds``
+    configs are evaluated before any warm-start candidates.
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -65,12 +93,21 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     if extended_space is None:
         # kernels whose declared budget assumes the paper-scale space opt in
         extended_space = bool(k.defaults.get("extended_space", False))
+    # NB: `is` checks — `warm_start=1` means k=1, but `1 in (None, True)`
+    # would be True under ==
+    k_nearest = 3 if (warm_start is None or warm_start is True) \
+        else int(warm_start)
+    all_seeds = list(seeds or [])
+    if k_nearest > 0:
+        all_seeds += warm_start_seeds(k, shape, profile=profile, cache=cache,
+                                      k_nearest=k_nearest)
     tuner = Tuner.from_tunable(k, shape, evaluator=evaluator, profile=profile,
                                cache=cache, interpret=interpret,
                                extended_space=extended_space)
     return tuner.tune(strategy=strategy, budget=budget, seed=seed,
                       record_to_cache=record, shape_key=k.key_for(shape),
-                      engine=engine, **strategy_kwargs)
+                      engine=engine, seeds=all_seeds or None,
+                      **strategy_kwargs)
 
 
 @dataclasses.dataclass
@@ -168,7 +205,7 @@ class TuningSession:
                 self.cache.record(k.name, k.key_for(shape), self.profile.name,
                                   best.config, best.time,
                                   outcome.result.strategy,
-                                  outcome.result.evaluations)
+                                  outcome.result.evaluations, shape=shape)
             log.info("session: %s -> %s", item.key,
                      "no feasible config" if best is None
                      else f"{best.time * 1e6:.1f} us {best.config}")
