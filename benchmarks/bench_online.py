@@ -1,0 +1,152 @@
+"""Online-tuning section: background retune + atomic config hot-swap.
+
+The serve-path feedback loop (KTT-style dynamic autotuning,
+arXiv:1910.08498): a ServeEngine whose geometry resolved through
+nearest-shape *transfer* queues a real background search, keeps serving
+while it runs, and hot-swaps the winner in at a step boundary.  This
+section proves the three contracts on the granite smoke model with the
+deterministic analytical evaluator (``noise_sigma=0``):
+
+* ``serve_no_block`` — a run with online tuning enabled completes every
+  submitted request while the background searches run; ``failures``
+  carries ``dropped_requests`` (compare.py gates growth vs baseline: the
+  swap must add **zero** failed requests).
+* ``hot_swap_winner`` — after the background job finishes, the live
+  engine's config AND the cache entry both equal the offline-tuned
+  winner for the same shape (record turns ``error`` otherwise — a hard
+  CI gate via the schema check).
+* ``post_swap_consistency`` — requests decoded after (or across) the
+  swap are token-identical to a never-swapped reference engine;
+  ``failures`` carries ``corrupted_requests``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import TPUAnalyticalEvaluator, TuningCache, resolve
+from repro.models.model import init_model
+from repro.serve import (JobStatus, OnlineTuneConfig, Request, ServeEngine,
+                         resolve_kernel_resolutions)
+from repro.tune import tune_kernel
+
+from .common import emit
+
+SLOTS, MAX_LEN = 2, 128
+NEW_TOKENS = 6
+
+
+def _requests(cfg, n: int, seed: int) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=seed * 1000 + i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=NEW_TOKENS)
+            for i in range(n)]
+
+
+def _outputs(done: List[Request]) -> Dict[int, List[int]]:
+    return {r.rid: list(r.output) for r in done}
+
+
+def main() -> None:
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    tmpdir = tempfile.mkdtemp(prefix="repro-bench-online-")
+    cache = TuningCache(os.path.join(tmpdir, "online_cache.json"))
+    evaluator = lambda k, s, p: TPUAnalyticalEvaluator(noise_sigma=0.0)  # noqa: E731
+
+    # -- offline reference: the winner a full search finds for this shape --
+    resolutions = resolve_kernel_resolutions(cfg, SLOTS, MAX_LEN, cache=cache)
+    fa = resolutions["flash_attention"]
+    offline = tune_kernel("flash_attention", fa.shape, strategy="full",
+                          budget=1_000_000, cache=cache, record=False,
+                          warm_start=False,
+                          evaluator=TPUAnalyticalEvaluator(noise_sigma=0.0))
+
+    # -- transfer source: a *nearby* tuned shape, so the serve-start
+    #    resolution is a borrowed config (provenance=transfer) ------------
+    fa_kernel = resolve("flash_attention")
+    near_shape = dict(fa.shape, Sq=fa.shape["Sq"] * 2, Sk=fa.shape["Sk"] * 2)
+    near_cfg = next(iter(fa_kernel.make_space(fa.shape)))
+    cache.record("flash_attention", fa_kernel.key_for(near_shape), fa.profile,
+                 near_cfg, 1.0, "full", 1, shape=near_shape)
+
+    # -- reference outputs: a never-swapped engine, online tuning off ------
+    ref = ServeEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN, cache=cache,
+                      online_tune=False)
+    for r in _requests(cfg, 4, seed=1) + _requests(cfg, 4, seed=2):
+        ref.submit(r)
+    expected = _outputs(ref.run())
+    ref.close()
+
+    # -- the online engine: background retune + hot-swap -------------------
+    engine = ServeEngine(
+        cfg, params, slots=SLOTS, max_len=MAX_LEN, cache=cache,
+        online_tune=OnlineTuneConfig(strategy="full", budget=1_000_000,
+                                     evaluator_factory=evaluator))
+    provenance = engine.kernel_resolutions["flash_attention"].provenance
+    batch_a = _requests(cfg, 4, seed=1)
+    for r in batch_a:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    done_a = engine.run()
+    wall_a = time.perf_counter() - t0
+    dropped = sum(1 for r in batch_a if not r.done)
+    running = sum(1 for j in engine.tuner.jobs.values()
+                  if j.status in (JobStatus.PENDING, JobStatus.RUNNING))
+    emit("online/serve_no_block", wall_a * 1e6 / max(engine.steps_total, 1),
+         (f"{len(done_a)}/{len(batch_a)} requests served "
+          f"(provenance={provenance}, {running} search(es) still running "
+          f"at run end)"
+          if not dropped else
+          f"{dropped} request(s) dropped by online-tuned run"),
+         status="ok" if not dropped and provenance == "transfer" else "error",
+         failures={"dropped_requests": dropped})
+
+    # -- the background winner must equal the offline winner and be live ---
+    finished = engine.tuner.wait(timeout=300)
+    fa_job = engine.tune_jobs.get("flash_attention")
+    live = engine.kernel_configs["flash_attention"]
+    entry = cache.get("flash_attention", fa.key, fa.profile)
+    matches = (finished and fa_job is not None
+               and fa_job.status is JobStatus.DONE
+               and live == offline.best_config
+               and entry is not None and entry.config == offline.best_config)
+    emit("online/hot_swap_winner", 0.0,
+         (f"post-swap config == offline full-search winner: {live} "
+          f"({fa_job.evaluations} background evals, "
+          f"swap_events={engine.swap_events})"
+          if matches else
+          f"hot-swap mismatch: live={live} offline={offline.best_config} "
+          f"cache={entry.config if entry else None} "
+          f"job={fa_job.status.value if fa_job else 'missing'}"),
+         status="ok" if matches else "error",
+         config=live, evaluations=(fa_job.evaluations if fa_job else 0))
+
+    # -- post-swap decode must be token-identical to the reference ---------
+    batch_b = _requests(cfg, 4, seed=2)
+    for r in batch_b:
+        engine.submit(r)
+    done_b = engine.run()
+    got = {**_outputs(done_a), **_outputs(done_b)}
+    corrupted = sum(1 for rid, out in expected.items()
+                    if got.get(rid) != out)
+    emit("online/post_swap_consistency", 0.0,
+         (f"{len(got)} requests token-identical across the swap "
+          f"(generation={engine.config_generation})"
+          if not corrupted else
+          f"{corrupted} request(s) decoded differently after the swap"),
+         status="ok" if not corrupted else "error",
+         failures={"corrupted_requests": corrupted})
+    engine.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -109,17 +109,23 @@ def _evaluations_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
     return idx
 
 
-def _failure_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
-    """(section, record) -> total per-config failures behind that record.
+def _failure_index(doc: Dict[str, Any]
+                   ) -> Dict[Tuple[str, str], Dict[str, int]]:
+    """(section, record) -> per-kind failure counts behind that record.
 
-    A record without a ``failures`` object counts as 0, so baselines from
-    before the field existed gate new failures just the same.
+    A record without a ``failures`` object counts as all-zero, so
+    baselines from before the field existed gate new failures just the
+    same.  Kinds are whatever the section emits — per-config
+    ``prepare``/``measure`` failures, or the online section's
+    ``dropped_requests``/``corrupted_requests`` (the zero-failed-requests
+    hot-swap gate).
     """
     idx = {}
     for sname, sec in doc.get("sections", {}).items():
         for rec in sec.get("records", []):
             failures = rec.get("failures") or {}
-            idx[(sname, rec["name"])] = sum(int(v) for v in failures.values())
+            idx[(sname, rec["name"])] = {k: int(v)
+                                         for k, v in failures.items()}
     return idx
 
 
@@ -160,18 +166,26 @@ def compare(base: Dict[str, Any], cur: Dict[str, Any],
         messages.append(f"  {key[0]}/{key[1]}: {base_us:.1f}us -> "
                         f"{cur_us:.1f}us ({rel:+.0%})")
 
-    # coverage gate: per-config failure growth means the benchmark stopped
-    # measuring configs the baseline still covered
+    # failure gate: growth of any failure kind versus the baseline is a
+    # regression — per-config prepare/measure growth means the benchmark
+    # stopped measuring configs it used to cover, and request-kind growth
+    # (dropped_requests/corrupted_requests) means the online hot-swap
+    # broke serving (the swap must add zero failed requests)
     base_fail = _failure_index(base)
     cur_fail = _failure_index(cur)
-    for key, n_cur in sorted(cur_fail.items()):
+    for key, kinds_cur in sorted(cur_fail.items()):
         if key not in base_fail:
             continue        # record new in current: nothing to compare
-        n_base = base_fail[key]
-        if n_cur > n_base:
-            regressions.append(
-                f"{key[0]}/{key[1]}: per-config failures grew "
-                f"{n_base} -> {n_cur} (coverage loss)")
+        kinds_base = base_fail[key]
+        grown = {kind: (kinds_base.get(kind, 0), n)
+                 for kind, n in kinds_cur.items()
+                 if n > kinds_base.get(kind, 0)}
+        if grown:
+            detail = ", ".join(f"{kind} {b} -> {n}"
+                               for kind, (b, n) in sorted(grown.items()))
+            label = ("failed requests" if any("request" in k for k in grown)
+                     else "per-config failures (coverage loss)")
+            regressions.append(f"{key[0]}/{key[1]}: {label} grew: {detail}")
 
     # search-efficiency gate: evaluation-count growth (e.g. warm-start
     # evals-to-target in the transfer section) means tuned knowledge

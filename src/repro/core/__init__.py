@@ -22,9 +22,9 @@ from .failures import (CompileError, EvaluationError, EvaluationTimeout,
 from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
-from .registry import (REGISTRY, AutotunePolicy, KernelRegistry,
-                       TunableKernel, default_policy, lookup, resolve,
-                       transfer_config, tunable)
+from .registry import (REGISTRY, AutotunePolicy, KernelRegistry, Resolution,
+                       TunableKernel, default_policy, lookup, lookup_resolved,
+                       resolve, transfer_config, tunable)
 from .space import Config, Constraint, Parameter, SearchSpace
 from .strategies import (AskTellDriver, Evolutionary, FullSearch,
                          GreedyCoordinateDescent, ParticleSwarm,
@@ -48,8 +48,9 @@ __all__ = [
     "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",
-    "REGISTRY", "AutotunePolicy", "KernelRegistry", "TunableKernel",
-    "default_policy", "lookup", "resolve", "transfer_config", "tunable",
+    "REGISTRY", "AutotunePolicy", "KernelRegistry", "Resolution",
+    "TunableKernel", "default_policy", "lookup", "lookup_resolved",
+    "resolve", "transfer_config", "tunable",
     "Config", "Constraint", "Parameter", "SearchSpace",
     "AskTellDriver", "Evolutionary", "FullSearch",
     "GreedyCoordinateDescent", "ParticleSwarm", "RandomSearch",

@@ -29,7 +29,7 @@ import os
 import tempfile
 import threading
 import time
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 log = logging.getLogger("repro.cache")
 
@@ -188,6 +188,9 @@ class TuningCache:
         self._lock = threading.RLock()
         self._data: Dict[str, Dict[str, Any]] = {}
         self._loaded = False
+        #: changed-entry subscribers: fn(key, CacheEntry), called after a
+        #: successful put() (see subscribe())
+        self._subscribers: List[Callable[[str, "CacheEntry"], None]] = []
 
     # -- persistence ---------------------------------------------------------
     def _load_locked(self) -> None:
@@ -265,7 +268,35 @@ class TuningCache:
             if only_if_better and old and old["time_s"] <= entry.time_s:
                 return False
             self._data[k] = entry.to_json()
+            subscribers = list(self._subscribers)
+        # notify outside the lock: a subscriber may itself read the cache
+        # (or take other locks) without deadlocking a concurrent writer
+        for fn in subscribers:
+            try:
+                fn(k, entry)
+            except Exception:  # noqa: BLE001 — a bad subscriber must not
+                log.exception("cache: change subscriber %r failed", fn)
         return True
+
+    # -- change notification ---------------------------------------------------
+    def subscribe(self, fn: Callable[[str, CacheEntry], None]) -> None:
+        """Register ``fn(key, entry)`` to run after every successful
+        :meth:`put` (and hence :meth:`record`).  Callbacks fire on the
+        *writer's* thread, outside the cache lock — the online-tuning
+        hot-swap path listens here so a background winner landing in the
+        cache reaches live serving engines without polling.  Exceptions
+        in a subscriber are logged and swallowed."""
+        with self._lock:
+            self._subscribers.append(fn)
+
+    def unsubscribe(self, fn: Callable[[str, CacheEntry], None]) -> bool:
+        """Remove a subscriber; returns False when it was not registered."""
+        with self._lock:
+            try:
+                self._subscribers.remove(fn)
+                return True
+            except ValueError:
+                return False
 
     def entries(self) -> Dict[str, CacheEntry]:
         with self._lock:

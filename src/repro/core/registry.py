@@ -367,14 +367,47 @@ def transfer_config(k: TunableKernel, shape: Shape, *,
     return None
 
 
-def lookup(kernel: "TunableKernel | str", shape: Shape, *,
-           profile: DeviceProfile = TPU_V5E,
-           cache: Optional[TuningCache] = None,
-           policy: "AutotunePolicy | str | None" = None,
-           registry: Optional[KernelRegistry] = None,
-           transfer: "bool | int | None" = None,
-           **tune_kwargs) -> Config:
-    """Resolve the configuration to run ``kernel`` with for ``shape``.
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """A resolved configuration plus *where it came from*.
+
+    ``provenance`` is one of:
+
+    * ``"exact"``     — tuned-cache hit for this very shape (incl. entries
+                        migrated from the legacy key format);
+    * ``"transfer"``  — borrowed from the nearest tuned shape
+                        (``source_shape`` says which);
+    * ``"tuned"``     — a search ran right now (ON_MISS/ALWAYS) and won;
+    * ``"heuristic"`` — the declared static fallback.
+
+    Anything that is *not* ``exact`` means the registry believes a strictly
+    better config may exist for this shape — the online-tuning subsystem
+    (:mod:`repro.serve.online`) keys its background-retune decision on
+    exactly that.
+    """
+
+    config: Config
+    provenance: str
+    kernel: str
+    shape: Dict[str, Any]
+    key: str
+    profile: str
+    #: the shape the config was actually tuned for, when transferred
+    source_shape: Optional[Dict[str, Any]] = None
+
+    @property
+    def exact(self) -> bool:
+        return self.provenance == "exact"
+
+
+def lookup_resolved(kernel: "TunableKernel | str", shape: Shape, *,
+                    profile: DeviceProfile = TPU_V5E,
+                    cache: Optional[TuningCache] = None,
+                    policy: "AutotunePolicy | str | None" = None,
+                    registry: Optional[KernelRegistry] = None,
+                    transfer: "bool | int | None" = None,
+                    **tune_kwargs) -> Resolution:
+    """:func:`lookup`, returning the config *with provenance*.
 
     Resolution order: tuned-cache hit -> (policy permitting) nearest-shape
     config transfer -> (policy permitting) one-shot tune recorded back into
@@ -392,6 +425,13 @@ def lookup(kernel: "TunableKernel | str", shape: Shape, *,
     pol = AutotunePolicy.coerce(policy)
     shape = dict(shape)
     key = k.key_for(shape)
+
+    def _res(config: Config, provenance: str,
+             source_shape: Optional[Dict[str, Any]] = None) -> Resolution:
+        return Resolution(config=config, provenance=provenance,
+                          kernel=k.name, shape=dict(shape), key=key,
+                          profile=profile.name, source_shape=source_shape)
+
     # NB: `is` checks — `transfer=1` means k=1, but `1 in (None, True)`
     # would be True under ==
     k_nearest = 3 if (transfer is None or transfer is True) else int(transfer)
@@ -401,9 +441,9 @@ def lookup(kernel: "TunableKernel | str", shape: Shape, *,
         if entry is None:
             entry = _migrate_legacy_entry(k, shape, key, profile, cache)
         if entry is not None:
-            return dict(entry.config)
+            return _res(dict(entry.config), "exact")
         if pol is AutotunePolicy.OFF:
-            return _validated_heuristic(k, shape)
+            return _res(_validated_heuristic(k, shape), "heuristic")
         if pol is AutotunePolicy.TRANSFER:
             moved = (transfer_config(k, shape, profile=profile, cache=cache,
                                      k_nearest=k_nearest)
@@ -412,8 +452,9 @@ def lookup(kernel: "TunableKernel | str", shape: Shape, *,
                 cfg, src = moved
                 log.info("transfer: %s %s <- config tuned for %s",
                          k.name, key, src.shape)
-                return cfg
-            return _validated_heuristic(k, shape)
+                return _res(cfg, "transfer",
+                            dict(src.shape) if src.shape else None)
+            return _res(_validated_heuristic(k, shape), "heuristic")
 
     # tune-on-miss / always: run the generic one-shot search, warm-started
     # from the nearest tuned shapes.  A shape the declared space cannot
@@ -431,7 +472,23 @@ def lookup(kernel: "TunableKernel | str", shape: Shape, *,
     except (EvaluationError, ValueError) as e:
         log.warning("autotune failed for %s %s (%s); using heuristic",
                     k.name, key, e)
-        return _validated_heuristic(k, shape)
+        return _res(_validated_heuristic(k, shape), "heuristic")
     if outcome.best_config is not None:
-        return dict(outcome.best_config)
-    return _validated_heuristic(k, shape)
+        return _res(dict(outcome.best_config), "tuned")
+    return _res(_validated_heuristic(k, shape), "heuristic")
+
+
+def lookup(kernel: "TunableKernel | str", shape: Shape, *,
+           profile: DeviceProfile = TPU_V5E,
+           cache: Optional[TuningCache] = None,
+           policy: "AutotunePolicy | str | None" = None,
+           registry: Optional[KernelRegistry] = None,
+           transfer: "bool | int | None" = None,
+           **tune_kwargs) -> Config:
+    """Resolve the configuration to run ``kernel`` with for ``shape``.
+
+    Thin wrapper over :func:`lookup_resolved` that drops the provenance —
+    call sites that only need a config keep their one-liner."""
+    return lookup_resolved(kernel, shape, profile=profile, cache=cache,
+                           policy=policy, registry=registry,
+                           transfer=transfer, **tune_kwargs).config

@@ -25,6 +25,17 @@ from typing import Callable, Dict, Iterator, List, Mapping, Optional, Sequence, 
 Config = Dict[str, object]      # one point in the space: {param name: value}
 
 
+def _value_ident(value: object) -> Tuple[bool, object]:
+    """Identity of a parameter value under type-aware matching.
+
+    Python equality conflates ``True``/``1`` and ``False``/``0``, so a
+    plain ``tuple.index``/``set`` treats bool and int values as the same
+    point — silently aliasing configs (the same bug PR 4 fixed for shape
+    dims).  Bools are categorical here: they only match bools.
+    """
+    return (isinstance(value, bool), value)
+
+
 @dataclasses.dataclass(frozen=True)
 class Parameter:
     """A tunable parameter: a name and its allowed discrete values."""
@@ -35,11 +46,16 @@ class Parameter:
     def __post_init__(self):
         if not self.values:
             raise ValueError(f"parameter {self.name!r} has no values")
-        if len(set(self.values)) != len(self.values):
+        if len({_value_ident(v) for v in self.values}) != len(self.values):
             raise ValueError(f"parameter {self.name!r} has duplicate values")
 
     def index_of(self, value: object) -> int:
-        return self.values.index(value)
+        ident = _value_ident(value)
+        for i, v in enumerate(self.values):
+            if _value_ident(v) == ident:
+                return i
+        raise ValueError(f"{value!r} is not a value of "
+                         f"parameter {self.name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +84,9 @@ class SearchSpace:
         self._params: List[Parameter] = []
         self._by_name: Dict[str, Parameter] = {}
         self._constraints: List[Constraint] = []
+        #: memoised feasible list, built lazily by the dense sampling
+        #: fallback (invalidated whenever the space is mutated)
+        self._feasible_memo: Optional[List[Config]] = None
         for p in parameters or ():
             self.add_parameter(p)
 
@@ -81,6 +100,7 @@ class SearchSpace:
             raise ValueError(f"duplicate parameter {param.name!r}")
         self._params.append(param)
         self._by_name[param.name] = param
+        self._feasible_memo = None
         return self
 
     def add_constraint(self, fn: Callable[..., bool],
@@ -89,6 +109,7 @@ class SearchSpace:
         if missing:
             raise KeyError(f"constraint references unknown parameters {missing}")
         self._constraints.append(Constraint(fn=fn, names=tuple(names), label=label))
+        self._feasible_memo = None
         return self
 
     # -- introspection -------------------------------------------------------
@@ -134,11 +155,27 @@ class SearchSpace:
 
     # -- enumeration ---------------------------------------------------------
     def __iter__(self) -> Iterator[Config]:
+        if self._feasible_memo is not None:
+            # the dense sampling fallback already enumerated: serve copies
+            # from the memo (callers may mutate the yielded dicts)
+            yield from (dict(cfg) for cfg in self._feasible_memo)
+            return
         names = self.names
         for combo in itertools.product(*(p.values for p in self._params)):
             cfg = dict(zip(names, combo))
             if self.is_feasible(cfg):
                 yield cfg
+
+    def _feasible_configs(self) -> List[Config]:
+        """The full feasible list, enumerated once and memoised.
+
+        Only the dense sampling fallback materialises this (spaces whose
+        constraints are too tight for rejection sampling); plain iteration
+        stays lazy until then.  Mutating the space invalidates the memo.
+        """
+        if self._feasible_memo is None:
+            self._feasible_memo = list(self)
+        return self._feasible_memo
 
     def enumerate(self, limit: Optional[int] = None) -> List[Config]:
         it = iter(self)
@@ -148,16 +185,23 @@ class SearchSpace:
 
     # -- sampling -------------------------------------------------------------
     def sample(self, rng: random.Random, max_tries: int = 10_000) -> Config:
-        """Uniformly sample a feasible config by rejection."""
-        for _ in range(max_tries):
-            cfg = {p.name: rng.choice(p.values) for p in self._params}
-            if self.is_feasible(cfg):
-                return cfg
-        # Dense fallback: enumerate and choose (guaranteed if non-empty).
-        all_cfg = self.enumerate()
+        """Uniformly sample a feasible config by rejection.
+
+        Once any stalled call has paid for the dense fallback (one full
+        enumeration, memoised), later calls draw from the memo directly —
+        repeated sampling in a tightly-constrained space is O(1) per draw
+        instead of re-enumerating the whole product every time.
+        """
+        if self._feasible_memo is None:
+            for _ in range(max_tries):
+                cfg = {p.name: rng.choice(p.values) for p in self._params}
+                if self.is_feasible(cfg):
+                    return cfg
+        # Dense fallback: enumerate once and choose (guaranteed if non-empty).
+        all_cfg = self._feasible_configs()
         if not all_cfg:
             raise ValueError("search space has no feasible configuration")
-        return rng.choice(all_cfg)
+        return dict(rng.choice(all_cfg))
 
     def sample_unique(self, rng: random.Random, count: int,
                       max_tries_factor: int = 200) -> List[Config]:
@@ -176,15 +220,21 @@ class SearchSpace:
         tries = 0
         budget = max(count * max_tries_factor, 1000)
         while len(out) < count and tries < budget:
+            # once the dense fallback has materialised the feasible list,
+            # stop rejection-sampling the moment every config is seen —
+            # further draws can only repeat
+            if (self._feasible_memo is not None
+                    and len(seen) >= len(self._feasible_memo)):
+                break
             tries += 1
             cfg = self.sample(rng)
-            key = tuple(sorted(cfg.items()))
+            key = self.config_key(cfg)
             if key not in seen:
                 seen.add(key)
                 out.append(cfg)
         if len(out) < count:
-            remaining = [cfg for cfg in self
-                         if tuple(sorted(cfg.items())) not in seen]
+            remaining = [dict(cfg) for cfg in self._feasible_configs()
+                         if self.config_key(cfg) not in seen]
             rng.shuffle(remaining)
             out.extend(remaining[: count - len(out)])
         return out
@@ -225,8 +275,14 @@ class SearchSpace:
 
     # -- misc ------------------------------------------------------------------
     def config_key(self, config: Mapping[str, object]) -> Tuple:
-        """Hashable identity of a config (parameter order normalised)."""
-        return tuple(config[n] for n in self.names)
+        """Hashable identity of a config (parameter order normalised).
+
+        Bool values are tagged so ``{"X": True}`` and ``{"X": 1}`` hash to
+        *different* keys — Python equality would conflate them, silently
+        merging distinct configs in the engine memo and the caches.
+        """
+        return tuple(_value_ident(config[n]) if isinstance(config[n], bool)
+                     else config[n] for n in self.names)
 
     def __repr__(self) -> str:
         return (f"SearchSpace({self.num_dimensions} params, "

@@ -1,3 +1,9 @@
-from .engine import Request, ServeEngine, resolve_kernel_configs
+from .engine import (Request, ServeEngine, resolve_kernel_configs,
+                     resolve_kernel_resolutions)
+from .online import (BackgroundTuner, ConfigSlot, JobStatus, OnlineTuneConfig,
+                     TuneJob, submit_for_resolutions)
 
-__all__ = ["Request", "ServeEngine", "resolve_kernel_configs"]
+__all__ = ["Request", "ServeEngine", "resolve_kernel_configs",
+           "resolve_kernel_resolutions",
+           "BackgroundTuner", "ConfigSlot", "JobStatus", "OnlineTuneConfig",
+           "TuneJob", "submit_for_resolutions"]

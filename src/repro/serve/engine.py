@@ -4,11 +4,19 @@ A deliberately compact production shape: fixed-size slot pool, each slot
 holds one request; finished slots are refilled from the queue (continuous
 batching).  The decode step itself is the shared ``dist.step.make_serve_step``
 — the same function the multi-pod dry-run lowers.
+
+Kernel configurations are resolved through the tunable-kernel registry at
+construction and live in an atomically-swappable :class:`ConfigSlot`: when
+online tuning is enabled and a resolution was *not* an exact cache hit
+(provenance ``transfer``/``heuristic``), a background search is queued, and
+the winner — written to the tuning cache — hot-swaps into the live engine
+at the next step boundary (never mid-step).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 from typing import Any, Dict, List, Optional
 
@@ -17,44 +25,75 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import kernels  # noqa: F401 — populates the tunable registry
+from ..core.cache import CacheEntry, TuningCache, default_cache, split_key
 from ..core.profiles import DeviceProfile, TPU_V5E
-from ..core.registry import AutotunePolicy, REGISTRY, lookup
+from ..core.registry import (AutotunePolicy, REGISTRY, Resolution,
+                             lookup_resolved)
 from ..dist.step import make_serve_step
 from ..models.config import ModelConfig
 from ..models.model import RunConfig, init_cache
+from .online import (BackgroundTuner, ConfigSlot, OnlineTuneConfig,
+                     submit_for_resolutions)
+
+log = logging.getLogger("repro.serve")
+
+#: env var enabling online (background) serve-path retuning by default
+_ONLINE_ENV_VAR = "REPRO_ONLINE_TUNE"
 
 
-def resolve_kernel_configs(cfg: ModelConfig, slots: int, max_len: int, *,
-                           profile: DeviceProfile = TPU_V5E,
-                           policy: "AutotunePolicy | str | None" = None
-                           ) -> Dict[str, Dict[str, Any]]:
-    """Kernel configurations this serving shape should run with, resolved
-    through the tunable-kernel registry.  Shape-keyed re-tuning is CLTune
-    scenario 3: the best block sizes depend on the serving geometry, so the
-    engine asks the registry instead of hard-coding them.
+def _online_tune_from_env() -> bool:
+    return os.environ.get(_ONLINE_ENV_VAR, "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
+def resolve_kernel_resolutions(cfg: ModelConfig, slots: int, max_len: int, *,
+                               profile: DeviceProfile = TPU_V5E,
+                               policy: "AutotunePolicy | str | None" = None,
+                               cache: Optional[TuningCache] = None
+                               ) -> Dict[str, Resolution]:
+    """Kernel configurations this serving shape should run with — resolved
+    through the tunable-kernel registry, *with provenance*.  Shape-keyed
+    re-tuning is CLTune scenario 3: the best block sizes depend on the
+    serving geometry, so the engine asks the registry instead of
+    hard-coding them.
 
     The serve-time default policy is ``TRANSFER``: an exact cache hit wins,
     an unseen decode geometry borrows the nearest tuned shape's config
     (feasibility-checked), and only then does the static heuristic apply —
     a new serving shape never stalls the engine on a tuning search.  An
     explicit ``REPRO_AUTOTUNE`` env setting still overrides this default
-    (pass ``policy=`` to pin the behaviour regardless).
+    (pass ``policy=`` to pin the behaviour regardless).  The provenance on
+    each :class:`~repro.core.registry.Resolution` is what the online tuner
+    keys on: anything non-exact is a candidate for a background retune.
     """
     if policy is None and "REPRO_AUTOTUNE" not in os.environ:
         policy = AutotunePolicy.TRANSFER
-    out: Dict[str, Dict[str, Any]] = {}
+    out: Dict[str, Resolution] = {}
     head_dim = cfg.resolved_head_dim
     if cfg.num_heads and head_dim and "flash_attention" in REGISTRY:
-        out["flash_attention"] = lookup(
+        out["flash_attention"] = lookup_resolved(
             "flash_attention",
             {"Sq": max_len, "Sk": max_len, "D": head_dim, "causal": True},
-            profile=profile, policy=policy)
+            profile=profile, policy=policy, cache=cache)
     if "gemm" in REGISTRY:
         # the decode hot loop is (slots, d_model) @ (d_model, vocab)
-        out["gemm"] = lookup(
+        out["gemm"] = lookup_resolved(
             "gemm", {"M": slots, "N": cfg.vocab_size, "K": cfg.d_model},
-            profile=profile, policy=policy)
+            profile=profile, policy=policy, cache=cache)
     return out
+
+
+def resolve_kernel_configs(cfg: ModelConfig, slots: int, max_len: int, *,
+                           profile: DeviceProfile = TPU_V5E,
+                           policy: "AutotunePolicy | str | None" = None,
+                           cache: Optional[TuningCache] = None
+                           ) -> Dict[str, Dict[str, Any]]:
+    """:func:`resolve_kernel_resolutions` minus the provenance — the
+    config-only map call sites predating online tuning expect."""
+    return {name: res.config
+            for name, res in resolve_kernel_resolutions(
+                cfg, slots, max_len, profile=profile, policy=policy,
+                cache=cache).items()}
 
 
 @dataclasses.dataclass
@@ -69,42 +108,226 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching decode engine with optional online autotuning.
+
+    ``online_tune`` turns the serve path into a concurrent feedback loop:
+
+    * ``False``/``None`` (default) — off; ``None`` defers to the
+      ``REPRO_ONLINE_TUNE`` env var.
+    * ``True`` — background retuning with default
+      :class:`~repro.serve.online.OnlineTuneConfig` knobs.
+    * an :class:`~repro.serve.online.OnlineTuneConfig` (or kwargs dict) —
+      background retuning with those knobs.
+    * a :class:`~repro.serve.online.BackgroundTuner` — share one tuner
+      (and its worker thread) across engines; the engine will not close it.
+
+    Every non-exact kernel resolution (nearest-shape transfer or static
+    heuristic) queues a real tuning job; when the search lands a winner in
+    the tuning cache, the engine hot-swaps it into ``kernel_configs`` at
+    the next step boundary via a generation-counted ConfigSlot — in-flight
+    steps never observe a torn update, and ``swap_events`` records the
+    step at which each upgrade took effect.
+
+    NB: the jitted decode step does not yet *consume* ``kernel_configs``
+    (``make_serve_step`` closes over the model config only; the resolved
+    configs are the registry's answer for this geometry, read through the
+    slot each step).  The hot-swap contract guarded here — atomic
+    step-boundary upgrades, zero dropped/corrupted requests, failed
+    searches leave the serving config standing — is exactly what wiring
+    the configs into the step function will inherit.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, run: RunConfig = RunConfig(),
                  profile: DeviceProfile = TPU_V5E,
-                 autotune: "AutotunePolicy | str | None" = None):
+                 autotune: "AutotunePolicy | str | None" = None,
+                 cache: Optional[TuningCache] = None,
+                 online_tune: ("bool | dict | OnlineTuneConfig | "
+                               "BackgroundTuner | None") = None):
         if cfg.input_mode != "tokens":
             raise ValueError("ServeEngine drives token models")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        #: registry-resolved kernel configurations for this serving shape
-        self.kernel_configs = resolve_kernel_configs(
-            cfg, slots, max_len, profile=profile, policy=autotune)
+        self.profile = profile
+        self._cache = cache if cache is not None else default_cache()
+        #: registry-resolved kernel configurations for this serving shape,
+        #: with provenance (exact / transfer / tuned / heuristic)
+        self.kernel_resolutions = resolve_kernel_resolutions(
+            cfg, slots, max_len, profile=profile, policy=autotune,
+            cache=self._cache)
+        #: live config holder; read once per decode step (hot-swap target)
+        self._slot = ConfigSlot({name: res.config for name, res
+                                 in self.kernel_resolutions.items()})
+        self._seen_generation = self._slot.generation
+        #: configs the current/most recent step ran with (slot snapshot)
+        self._step_configs = self._slot.read()[0]
+        #: [{"step", "generation", "kernels"}] — when upgrades took effect
+        self.swap_events: List[Dict[str, Any]] = []
+        self._steps_total = 0
+        self._closed = False
         self.cache = init_cache(cfg, slots, max_len)
         self._step = jax.jit(make_serve_step(cfg, run, greedy=True))
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_pos = np.zeros(slots, np.int32)   # next write position
         self._queue: List[Request] = []
         self._pos = 0                                 # global decode position
+        self._init_online(online_tune)
+
+    # -- online tuning ---------------------------------------------------------
+    def _init_online(self, online_tune) -> None:
+        self.tuner: Optional[BackgroundTuner] = None
+        self.tune_jobs: Dict[str, Any] = {}
+        self._owns_tuner = False
+        self._watched: Dict[tuple, str] = {}
+        if online_tune is None:
+            online_tune = _online_tune_from_env()
+        if isinstance(online_tune, bool):
+            if not online_tune:
+                return
+            knobs = OnlineTuneConfig()
+        elif isinstance(online_tune, BackgroundTuner):
+            knobs = None
+        elif isinstance(online_tune, OnlineTuneConfig):
+            knobs = online_tune
+        elif isinstance(online_tune, dict):
+            knobs = OnlineTuneConfig(**online_tune)
+        else:
+            # the PR 4 truthy-coercion lesson: 0 / "off" / "" must not
+            # silently ENABLE background tuning with default knobs
+            raise TypeError(
+                f"online_tune must be a bool, dict, OnlineTuneConfig or "
+                f"BackgroundTuner, got {type(online_tune).__name__!s}: "
+                f"{online_tune!r}")
+        if isinstance(online_tune, BackgroundTuner):
+            self.tuner = online_tune
+            if self.tuner.cache is not self._cache:
+                log.warning("online: shared BackgroundTuner writes to a "
+                            "different cache than this engine watches; "
+                            "hot-swaps will not fire — pass the same cache")
+        else:
+            self.tuner = BackgroundTuner(cache=self._cache, config=knobs,
+                                         profile=self.profile)
+            self._owns_tuner = True
+        # watch the cache for our (kernel, shape-key, profile) triples: the
+        # background winner lands there first, then hot-swaps in here
+        for name, res in self.kernel_resolutions.items():
+            self._watched[(res.kernel, res.key, res.profile)] = name
+        self._cache.subscribe(self._on_cache_change)
+        self.tune_jobs = submit_for_resolutions(self.tuner,
+                                                self.kernel_resolutions)
+
+    def _on_cache_change(self, key: str, entry: CacheEntry) -> None:
+        """Cache-writer thread: hot-swap a freshly tuned winner for one of
+        our watched geometries into the live slot (step boundary applies
+        it; see :meth:`run`)."""
+        if self._closed:
+            return
+        fields = split_key(key)
+        if len(fields) != 3:
+            return
+        name = self._watched.get(tuple(fields))
+        if name is None:
+            return
+        # re-read the authoritative entry rather than trusting the
+        # notification payload: two concurrent writers' notifications can
+        # arrive out of order, and the cache's only_if_better semantics
+        # make the *current* entry the best one — a stale late
+        # notification then swaps in the same (current) config, a no-op
+        current = self._cache.get(*fields)
+        if current is None:
+            return
+        gen = self._slot.swap(name, dict(current.config))
+        log.info("online: hot-swap %s -> %s (generation %d)",
+                 name, dict(current.config), gen)
+
+    def close(self) -> None:
+        """Detach from the cache and stop an engine-owned tuner.  Idempotent;
+        serving state (queue, KV cache) is untouched."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._watched:
+            self._cache.unsubscribe(self._on_cache_change)
+        if self.tuner is not None and self._owns_tuner:
+            self.tuner.close(wait=False)
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def kernel_configs(self) -> Dict[str, Dict[str, Any]]:
+        """The configs the *next* step will run with (current snapshot)."""
+        return self._slot.read()[0]
+
+    @property
+    def config_generation(self) -> int:
+        return self._slot.generation
+
+    @property
+    def steps_total(self) -> int:
+        """Decode steps executed across every :meth:`run` call."""
+        return self._steps_total
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self._queue.append(req)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Decode until all submitted requests finish."""
+    def run(self, max_steps: int = 10_000,
+            on_step=None) -> List[Request]:
+        """Decode until all submitted requests finish.
+
+        Each iteration reads one consistent ``kernel_configs`` snapshot
+        from the ConfigSlot, so a background hot-swap only ever takes
+        effect *between* steps; ``swap_events`` records the step count at
+        which each new generation was first used.  ``on_step(engine, step)``
+        is an optional observability hook called at every step boundary
+        (after the snapshot read, before the decode step).
+
+        Hitting ``max_steps`` does **not** silently drop work: requests
+        still in flight or queued are returned too, flagged ``done=False``,
+        with a truncation warning logged — and they stay in the engine, so
+        a subsequent :meth:`run` resumes them.
+        """
         finished: List[Request] = []
         steps = 0
         while (any(self._slot_req) or self._queue) and steps < max_steps:
+            configs, gen = self._slot.read()
+            if gen != self._seen_generation:
+                changed = [n for n, c in configs.items()
+                           if self._step_configs.get(n) != c]
+                self.swap_events.append({"step": self._steps_total,
+                                         "generation": gen,
+                                         "kernels": changed})
+                log.info("online: step %d now running generation %d "
+                         "(changed: %s)", self._steps_total, gen, changed)
+                self._seen_generation = gen
+            self._step_configs = configs
+            if on_step is not None:
+                on_step(self, self._steps_total)
             self._fill_slots()
             tokens = self._current_tokens()
             next_tok, self.cache = self._step(self.params, self.cache,
                                               tokens, self._pos)
             self._pos += 1
             steps += 1
+            self._steps_total += 1
             self._absorb(np.asarray(next_tok), finished)
+        unfinished = ([r for r in self._slot_req if r is not None]
+                      + list(self._queue))
+        if unfinished:
+            log.warning(
+                "serve: run() hit max_steps=%d with %d unfinished "
+                "request(s) (%d in flight, %d queued); returning them with "
+                "done=False — call run() again to resume", max_steps,
+                len(unfinished),
+                sum(1 for r in self._slot_req if r is not None),
+                len(self._queue))
+            finished.extend(unfinished)
         return finished
 
     # -- internals ---------------------------------------------------------------

@@ -1,0 +1,325 @@
+"""Online serve-path autotuning: background retune + atomic config hot-swap.
+
+CLTune's scenario 3 (optimal parameters change with input shapes) used to
+end at serve start: ``resolve_kernel_configs`` ran once with the TRANSFER
+policy, so a borrowed nearest-shape config was the *permanent* config for
+that serving geometry even though a real search could find a strictly
+better one.  Dynamic autotuners (Kernel Tuning Toolkit, arXiv:1910.08498)
+close that gap by tuning *concurrently with production execution* and
+swapping winners in.  This module is that loop:
+
+* :class:`ConfigSlot` — a generation-counted, atomically-swappable holder
+  for the engine's live ``kernel_configs``.  The serve loop reads one
+  immutable snapshot per step, so an in-flight step can never observe a
+  torn update (half old, half new).
+* :class:`BackgroundTuner` — a worker thread that turns every non-exact
+  resolution (provenance ``transfer``/``heuristic``, see
+  :class:`repro.core.registry.Resolution`) into a real tuning job driving
+  the existing :class:`~repro.core.engine.EvaluationEngine`, warm-started
+  from ``cache.nearest`` seeds.  Winners are recorded into the
+  :class:`~repro.core.cache.TuningCache`; the cache's changed-entry
+  notification then hot-swaps them into every subscribed engine — and the
+  next engine for the same geometry starts with an exact hit.
+
+Serving never blocks on tuning: jobs are queued and run on a daemon
+worker, failed or aborted searches (PR 3 failure taxonomy) leave the
+original config in place, and the swap itself is one reference assignment
+under a lock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import logging
+import queue
+import threading
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+from ..core.cache import TuningCache, default_cache
+from ..core.failures import EvaluationError
+from ..core.profiles import DeviceProfile, TPU_V5E, get_profile
+from ..core.registry import Resolution, TunableKernel, resolve
+
+log = logging.getLogger("repro.serve.online")
+
+
+class ConfigSlot:
+    """Atomic, generation-counted holder of a ``{kernel: config}`` map.
+
+    Readers call :meth:`read` once per step and get ``(snapshot, gen)``;
+    the snapshot is a fresh shallow copy whose config dicts are never
+    mutated in place, so a step that started before a swap keeps a fully
+    consistent view.  Writers replace one kernel's config (or the whole
+    map) under the lock and bump the generation — a reader comparing
+    generations across steps detects exactly when an upgrade landed.
+    """
+
+    def __init__(self, configs: Optional[Mapping[str, Dict[str, Any]]] = None):
+        self._lock = threading.Lock()
+        self._configs: Dict[str, Dict[str, Any]] = {
+            name: dict(cfg) for name, cfg in (configs or {}).items()}
+        self._generation = 0
+
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+    def read(self) -> Tuple[Dict[str, Dict[str, Any]], int]:
+        """One consistent snapshot plus the generation that produced it."""
+        with self._lock:
+            return ({name: dict(cfg) for name, cfg in self._configs.items()},
+                    self._generation)
+
+    def swap(self, kernel: str, config: Mapping[str, Any]) -> int:
+        """Atomically replace one kernel's config; returns the new generation.
+
+        A no-op swap (identical config) does not bump the generation, so
+        readers never see phantom upgrades.
+        """
+        new = dict(config)
+        with self._lock:
+            if self._configs.get(kernel) == new:
+                return self._generation
+            self._configs[kernel] = new
+            self._generation += 1
+            return self._generation
+
+    def replace(self, configs: Mapping[str, Dict[str, Any]]) -> int:
+        """Atomically replace the whole map; returns the new generation."""
+        with self._lock:
+            self._configs = {name: dict(cfg)
+                             for name, cfg in configs.items()}
+            self._generation += 1
+            return self._generation
+
+
+class JobStatus(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"          # search finished; winner recorded to the cache
+    FAILED = "failed"      # search failed/aborted; original config stands
+
+
+@dataclasses.dataclass
+class TuneJob:
+    """One queued background retune for a (kernel, shape, profile)."""
+
+    kernel: str
+    shape: Dict[str, Any]
+    profile: str
+    #: provenance of the config being served meanwhile (transfer/heuristic)
+    provenance: str
+    status: JobStatus = JobStatus.PENDING
+    #: winning config, once DONE
+    config: Optional[Dict[str, Any]] = None
+    best_time: Optional[float] = None
+    evaluations: int = 0
+    error: Optional[str] = None
+    #: the resolved declaration (kept so unregistered kernels tune too)
+    tunable: Optional[TunableKernel] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        k = self.tunable if self.tunable is not None else resolve(self.kernel)
+        return (self.kernel, k.key_for(self.shape), self.profile)
+
+
+@dataclasses.dataclass
+class OnlineTuneConfig:
+    """Knobs for :class:`BackgroundTuner` (what one background job runs)."""
+
+    #: search strategy; None = the kernel's declared default
+    strategy: Optional[str] = None
+    #: evaluation budget per job; None = the kernel's declared default
+    #: (serve-side jobs usually want a small explicit budget)
+    budget: Optional[int] = None
+    #: (kernel, shape, profile) -> Evaluator; None = per-kernel default
+    evaluator_factory: Optional[Callable[..., Any]] = None
+    #: EngineConfig / kwargs dict for the EvaluationEngine
+    engine: Optional[Any] = None
+    #: warm-start neighbour pool handed to tune_kernel (cache.nearest)
+    warm_start: "bool | int" = True
+    interpret: bool = True
+    seed: int = 0
+    #: refuse new jobs beyond this many queued-but-unstarted ones
+    max_pending: int = 8
+
+
+class BackgroundTuner:
+    """Single-worker background tuning queue feeding a shared cache.
+
+    ``submit`` is non-blocking and deduplicates by (kernel, shape-key,
+    profile): a serving engine may resolve the same geometry every restart
+    but only one search ever runs for it.  The worker drives the ordinary
+    ``tune_kernel`` path — the same :class:`~repro.core.engine.EvaluationEngine`,
+    warm-started from ``cache.nearest`` — and records the winner with
+    :meth:`TuningCache.record`, which fires the cache's changed-entry
+    notification (the hot-swap trigger).  Failed or aborted searches record
+    nothing, so the config being served stays untouched.
+    """
+
+    def __init__(self, cache: Optional[TuningCache] = None,
+                 config: Optional[OnlineTuneConfig] = None,
+                 profile: DeviceProfile = TPU_V5E):
+        self.cache = cache if cache is not None else default_cache()
+        self.config = config or OnlineTuneConfig()
+        self.profile = profile
+        self.jobs: Dict[Tuple[str, str, str], TuneJob] = {}
+        self._queue: "queue.Queue[Optional[TuneJob]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._outstanding = 0
+        self._closed = False
+        self._worker: Optional[threading.Thread] = None
+
+    # -- public API ------------------------------------------------------------
+    def submit(self, kernel: "TunableKernel | str",
+               shape: Mapping[str, Any], *,
+               profile: Optional[DeviceProfile] = None,
+               provenance: str = "transfer") -> Optional[TuneJob]:
+        """Enqueue a retune; returns the (possibly pre-existing) job, or
+        None when the tuner is closed / the pending queue is full."""
+        prof = (profile or self.profile).name
+        k = resolve(kernel)
+        job = TuneJob(kernel=k.name, shape=dict(shape), profile=prof,
+                      provenance=provenance, tunable=k)
+        key = job.key
+        with self._lock:
+            if self._closed:
+                return None
+            existing = self.jobs.get(key)
+            if existing is not None:
+                if existing.status is not JobStatus.FAILED:
+                    return existing
+                # a FAILED job must not pin its geometry forever (transient
+                # failures, fixed declarations): the next submit retries.
+                # Retry volume stays bounded — one attempt per submit call,
+                # and engines submit once per construction.
+                log.info("online: retrying previously failed retune %s "
+                         "(%s)", key, existing.error)
+            pending = sum(1 for j in self.jobs.values()
+                          if j.status is JobStatus.PENDING)
+            if pending >= self.config.max_pending:
+                log.warning("online: dropping retune for %s (queue full, "
+                            "%d pending)", key, pending)
+                return None
+            self.jobs[key] = job
+            self._outstanding += 1
+            self._ensure_worker_locked()
+        self._queue.put(job)
+        log.info("online: queued background retune %s shape=%s "
+                 "(serving a %s config meanwhile)",
+                 job.kernel, job.shape, provenance)
+        return job
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted job reached a terminal status."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._outstanding == 0,
+                                       timeout=timeout)
+
+    def close(self, wait: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Stop accepting jobs; optionally wait for the queue to drain."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            worker = self._worker
+        if worker is not None:
+            self._queue.put(None)
+            if wait:
+                worker.join(timeout)
+
+    def __enter__(self) -> "BackgroundTuner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker ---------------------------------------------------------------
+    def _ensure_worker_locked(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="online-tuner", daemon=True)
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            try:
+                self._run_job(job)
+            except Exception as e:  # noqa: BLE001 — the worker must survive
+                job.status = JobStatus.FAILED
+                job.error = f"{type(e).__name__}: {e}"
+                log.exception("online: retune %s crashed", job.kernel)
+            finally:
+                with self._idle:
+                    self._outstanding -= 1
+                    if self._outstanding == 0:
+                        self._idle.notify_all()
+
+    def _run_job(self, job: TuneJob) -> None:
+        from ..tune.api import tune_kernel    # late: tune layers above serve
+        job.status = JobStatus.RUNNING
+        cfg = self.config
+        k = job.tunable if job.tunable is not None else resolve(job.kernel)
+        profile = get_profile(job.profile)
+        kwargs: Dict[str, Any] = dict(
+            strategy=cfg.strategy, budget=cfg.budget, seed=cfg.seed,
+            interpret=cfg.interpret, engine=cfg.engine,
+            warm_start=cfg.warm_start)
+        if cfg.evaluator_factory is not None:
+            kwargs["evaluator"] = cfg.evaluator_factory(k, job.shape, profile)
+        try:
+            # record=False: the tuner itself decides what reaches the cache
+            # — an aborted partial search must NOT hot-swap a half-searched
+            # config over the one being served
+            outcome = tune_kernel(k, job.shape, profile=profile,
+                                  cache=self.cache, record=False, **kwargs)
+        except (EvaluationError, ValueError) as e:
+            job.status = JobStatus.FAILED
+            job.error = f"{type(e).__name__}: {e}"
+            log.warning("online: retune %s %s failed (%s); serving config "
+                        "stays", job.kernel, job.shape, job.error)
+            return
+        aborted = outcome.result.extra.get("aborted")
+        if outcome.best_config is None or aborted:
+            job.status = JobStatus.FAILED
+            job.error = (f"aborted: {aborted.get('reason')}" if aborted
+                         else "no feasible configuration found")
+            log.warning("online: retune %s %s found no winner (%s); serving "
+                        "config stays", job.kernel, job.shape, job.error)
+            return
+        job.config = dict(outcome.best_config)
+        job.best_time = outcome.best_time
+        job.evaluations = outcome.result.evaluations
+        # record -> cache notification -> every subscribed engine hot-swaps
+        self.cache.record(k.name, k.key_for(job.shape), job.profile,
+                          job.config, outcome.best_time,
+                          outcome.result.strategy,
+                          outcome.result.evaluations, shape=job.shape)
+        self.cache.save()
+        job.status = JobStatus.DONE
+        log.info("online: retune %s %s done: %s (%.3g s, %d evals)",
+                 job.kernel, job.shape, job.config, outcome.best_time,
+                 job.evaluations)
+
+
+def submit_for_resolutions(tuner: BackgroundTuner,
+                           resolutions: Mapping[str, Resolution]
+                           ) -> Dict[str, TuneJob]:
+    """Queue a retune for every non-exact resolution; returns the jobs."""
+    jobs: Dict[str, TuneJob] = {}
+    for name, res in resolutions.items():
+        if res.exact or res.provenance == "tuned":
+            continue
+        job = tuner.submit(res.kernel, res.shape, provenance=res.provenance)
+        if job is not None:
+            jobs[name] = job
+    return jobs

@@ -147,6 +147,26 @@ def test_equal_or_fewer_failures_pass(tmp_path):
     assert run_main(tmp_path, base, fewer) == compare.OK
 
 
+def test_dropped_request_growth_is_a_regression(tmp_path, capsys):
+    """The online hot-swap gate: any dropped/corrupted request beyond the
+    (zero) baseline is a regression, reported as failed requests."""
+    base = doc(online=section([frec("online/serve_no_block", 0.0,
+                                    {"dropped_requests": 0})]))
+    cur = doc(online=section([frec("online/serve_no_block", 0.0,
+                                   {"dropped_requests": 1})]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+    assert "failed requests" in capsys.readouterr().err
+
+
+def test_request_failure_kind_cannot_hide_behind_another(tmp_path):
+    # one kind shrinking must not mask another kind growing
+    base = doc(online=section([frec("r", 0.0, {"dropped_requests": 2,
+                                               "corrupted_requests": 0})]))
+    cur = doc(online=section([frec("r", 0.0, {"dropped_requests": 0,
+                                              "corrupted_requests": 1})]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+
+
 def test_failures_on_record_new_in_current_ignored(tmp_path):
     cur = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0),
                             frec("fresh", 50.0, {"prepare": 4})]))

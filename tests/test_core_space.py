@@ -104,3 +104,103 @@ def test_parameter_index_of(values):
     p = Parameter("p", tuple(values))
     for i, v in enumerate(values):
         assert p.index_of(v) == i
+
+
+# ---------------------------------------------------------------------------
+# bool/int aliasing (values=(0, 1) must not resolve index_of(True) -> 1)
+# ---------------------------------------------------------------------------
+
+def test_index_of_does_not_alias_bool_and_int():
+    p = Parameter("X", (0, 1))
+    assert p.index_of(0) == 0 and p.index_of(1) == 1
+    with pytest.raises(ValueError):
+        p.index_of(True)
+    with pytest.raises(ValueError):
+        p.index_of(False)
+
+
+def test_parameter_allows_bool_and_int_side_by_side():
+    p = Parameter("X", (False, True, 0, 1))
+    assert [p.index_of(v) for v in (False, True, 0, 1)] == [0, 1, 2, 3]
+
+
+def test_config_key_distinguishes_bool_from_int():
+    sp = SearchSpace([Parameter("X", (False, True, 0, 1))])
+    keys = {sp.config_key({"X": v}) for v in (False, True, 0, 1)}
+    assert len(keys) == 4
+    idx = {sp.to_indices({"X": v}) for v in (False, True, 0, 1)}
+    assert len(idx) == 4
+
+
+# ---------------------------------------------------------------------------
+# dense-fallback memoisation (stalled sampling must not be quadratic)
+# ---------------------------------------------------------------------------
+
+def _tight_space(calls, n_params=2):
+    """8**n_params combos, exactly one feasible (all params == 7)."""
+    sp = SearchSpace()
+    names = []
+    for i in range(n_params):
+        name = f"P{i}"
+        names.append(name)
+        sp.add_parameter(name=name, values=(1, 2, 3, 4, 5, 6, 7, 8))
+
+    def only_one(*vals):
+        calls.append(1)
+        return all(v == 7 for v in vals)
+
+    sp.add_constraint(only_one, names)
+    return sp
+
+
+def test_sample_memoises_feasible_list_after_dense_fallback():
+    calls = []
+    sp = _tight_space(calls)
+    rng = random.Random(0)
+    first = sp.sample(rng, max_tries=0)      # no rejection: forces fallback
+    assert first == {"P0": 7, "P1": 7}
+    assert sp._feasible_memo is not None
+    n_after_first = len(calls)
+    # subsequent stalled samples draw from the memo: no re-enumeration
+    for _ in range(50):
+        assert sp.sample(rng, max_tries=0) == {"P0": 7, "P1": 7}
+    assert len(calls) == n_after_first
+
+
+def test_sample_unique_enumerates_at_most_once():
+    # 8^5 = 32768 combos, 1 feasible: rejection cannot realistically hit it,
+    # so every sample() call stalls into the dense fallback.  Pre-memo, each
+    # of sample_unique's up-to-1000 loop iterations re-enumerated the whole
+    # product (tens of millions of constraint checks); now the enumeration
+    # happens exactly once.
+    calls = []
+    sp = _tight_space(calls, n_params=5)
+    out = sp.sample_unique(random.Random(1), 5)
+    assert out == [{f"P{i}": 7 for i in range(5)}]
+    # <= one full enumeration (32768) + a couple of rejection runs —
+    # the pre-fix quadratic path cost tens of millions of checks
+    assert len(calls) <= 8 ** 5 + 3 * 10_000
+
+
+def test_memo_invalidated_on_space_mutation():
+    sp = SearchSpace()
+    sp.add_parameter(name="A", values=(1, 2))
+    assert sp.sample(random.Random(0)) in ({"A": 1}, {"A": 2})
+    sp._feasible_configs()
+    assert sp._feasible_memo is not None
+    sp.add_parameter(name="B", values=(10, 20))
+    assert sp._feasible_memo is None
+    assert len(sp.enumerate()) == 4
+    sp._feasible_configs()
+    sp.add_constraint(lambda a: a == 1, ("A",))
+    assert sp._feasible_memo is None
+    assert len(sp.enumerate()) == 2
+
+
+def test_iteration_yields_copies_from_memo():
+    sp = SearchSpace()
+    sp.add_parameter(name="A", values=(1, 2))
+    sp._feasible_configs()
+    for cfg in sp:
+        cfg["A"] = 999          # mutating a yielded config is harmless
+    assert sp.enumerate() == [{"A": 1}, {"A": 2}]

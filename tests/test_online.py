@@ -1,0 +1,483 @@
+"""Online serve-path autotuning: ConfigSlot atomicity, background retune
+jobs, cache change notification, provenance-reporting lookup, and the
+ServeEngine hot-swap contract (upgrades land between steps, failed searches
+leave the serving config untouched)."""
+
+import logging
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (SearchSpace, TPUAnalyticalEvaluator, TPU_V5E,
+                        TuningCache, lookup_resolved, tunable)
+from repro.models.model import init_model
+from repro.serve import (BackgroundTuner, ConfigSlot, JobStatus,
+                         OnlineTuneConfig, Request, ServeEngine,
+                         resolve_kernel_resolutions)
+
+
+# -- fixtures ----------------------------------------------------------------
+
+def _toy_kernel(name="onl", values=(1, 2, 4, 8), fail=False):
+    """time = 1/X over X values constrained to divide shape["N"]."""
+
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="X", values=values)
+        sp.add_constraint(lambda x: shape["N"] % x == 0, ("X",), "N % X")
+        return sp
+
+    def model(shape, cfg, prof):
+        if fail:
+            raise RuntimeError("model exploded")
+        return 1.0 / cfg["X"]
+
+    @tunable(name=name, space=space, heuristic=lambda s: {"X": 1},
+             analytical_model=model, register=False)
+    def build(shape, config):
+        return lambda: config["X"]
+
+    return build
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return TuningCache(str(tmp_path / "cache.json"))
+
+
+def _tuner_cfg(**kw):
+    kw.setdefault("strategy", "full")
+    kw.setdefault("evaluator_factory",
+                  lambda k, s, p: TPUAnalyticalEvaluator(noise_sigma=0.0))
+    return OnlineTuneConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, tokens=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=tokens)
+            for i in range(n)]
+
+
+# -- ConfigSlot --------------------------------------------------------------
+
+def test_config_slot_swap_bumps_generation():
+    slot = ConfigSlot({"gemm": {"BM": 8}})
+    configs, gen = slot.read()
+    assert configs == {"gemm": {"BM": 8}} and gen == 0
+    assert slot.swap("gemm", {"BM": 16}) == 1
+    assert slot.read() == ({"gemm": {"BM": 16}}, 1)
+
+
+def test_config_slot_noop_swap_keeps_generation():
+    slot = ConfigSlot({"gemm": {"BM": 8}})
+    assert slot.swap("gemm", {"BM": 8}) == 0
+    assert slot.generation == 0
+
+
+def test_config_slot_snapshot_is_isolated():
+    slot = ConfigSlot({"gemm": {"BM": 8}})
+    snap, _ = slot.read()
+    snap["gemm"]["BM"] = 999            # mutating a snapshot is harmless
+    snap["new"] = {}
+    assert slot.read()[0] == {"gemm": {"BM": 8}}
+    src = {"BM": 4}
+    slot.swap("gemm", src)
+    src["BM"] = 123                     # later mutation of the source too
+    assert slot.read()[0] == {"gemm": {"BM": 4}}
+
+
+def test_config_slot_replace_whole_map():
+    slot = ConfigSlot({"a": {"X": 1}})
+    gen = slot.replace({"b": {"Y": 2}})
+    assert slot.read() == ({"b": {"Y": 2}}, gen)
+
+
+def test_config_slot_concurrent_swaps_never_tear():
+    """Readers must only ever see complete {k1, k2} states from one writer."""
+    slot = ConfigSlot({"k1": {"v": 0}, "k2": {"v": 0}})
+    stop = threading.Event()
+    torn = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            i += 1
+            slot.replace({"k1": {"v": i}, "k2": {"v": i}})
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(2000):
+            snap, _ = slot.read()
+            if snap["k1"]["v"] != snap["k2"]["v"]:
+                torn.append(snap)
+    finally:
+        stop.set()
+        t.join()
+    assert not torn
+
+
+# -- cache change notification ----------------------------------------------
+
+def test_cache_subscriber_fires_on_record(cache):
+    seen = []
+    cache.subscribe(lambda key, entry: seen.append((key, entry.config)))
+    assert cache.record("k", "s", "p", {"X": 2}, 0.5, "full", 4)
+    assert len(seen) == 1 and seen[0][1] == {"X": 2}
+    assert cache.unsubscribe(lambda: None) is False
+
+
+def test_cache_subscriber_not_fired_on_refused_put(cache):
+    seen = []
+    cache.record("k", "s", "p", {"X": 2}, 0.5, "full", 4)
+    cache.subscribe(lambda key, entry: seen.append(key))
+    # worse time under only_if_better: refused, no notification
+    assert not cache.record("k", "s", "p", {"X": 1}, 0.9, "full", 4)
+    assert not cache.record("k", "s", "p", {"X": 1}, float("inf"), "full", 4)
+    assert seen == []
+
+
+def test_cache_subscriber_exception_is_swallowed(cache, caplog):
+    def bad(key, entry):
+        raise RuntimeError("boom")
+
+    seen = []
+    cache.subscribe(bad)
+    cache.subscribe(lambda key, entry: seen.append(key))
+    with caplog.at_level(logging.ERROR, logger="repro.cache"):
+        assert cache.record("k", "s", "p", {"X": 2}, 0.5, "full", 4)
+    assert len(seen) == 1               # later subscribers still ran
+    assert any("subscriber" in r.message for r in caplog.records)
+
+
+def test_cache_unsubscribe_stops_notifications(cache):
+    seen = []
+    fn = lambda key, entry: seen.append(key)        # noqa: E731
+    cache.subscribe(fn)
+    cache.record("k", "s1", "p", {"X": 2}, 0.5, "full", 4)
+    assert cache.unsubscribe(fn) is True
+    cache.record("k", "s2", "p", {"X": 2}, 0.5, "full", 4)
+    assert len(seen) == 1
+
+
+# -- lookup provenance -------------------------------------------------------
+
+def test_lookup_resolved_provenance_chain(cache):
+    k = _toy_kernel()
+    # empty cache, TRANSFER: heuristic
+    res = lookup_resolved(k, {"N": 1024}, cache=cache, policy="transfer")
+    assert res.provenance == "heuristic" and not res.exact
+    assert res.config == {"X": 1}
+    # nearby tuned shape: transfer, with the source shape reported
+    cache.record(k.name, k.key_for({"N": 512}), TPU_V5E.name, {"X": 4},
+                 0.25, "full", 4, shape={"N": 512})
+    res = lookup_resolved(k, {"N": 1024}, cache=cache, policy="transfer")
+    assert res.provenance == "transfer" and res.config == {"X": 4}
+    assert res.source_shape == {"N": 512}
+    # exact entry wins
+    cache.record(k.name, k.key_for({"N": 1024}), TPU_V5E.name, {"X": 8},
+                 0.125, "full", 4, shape={"N": 1024})
+    res = lookup_resolved(k, {"N": 1024}, cache=cache, policy="transfer")
+    assert res.provenance == "exact" and res.exact
+    assert res.config == {"X": 8}
+
+
+def test_lookup_resolved_tuned_provenance(cache):
+    k = _toy_kernel()
+    res = lookup_resolved(
+        k, {"N": 64}, cache=cache, policy="on_miss", strategy="full",
+        evaluator=TPUAnalyticalEvaluator(noise_sigma=0.0))
+    assert res.provenance == "tuned"
+    assert res.config == {"X": 8}
+
+
+# -- BackgroundTuner ---------------------------------------------------------
+
+def test_background_tuner_records_winner_and_notifies(cache):
+    k = _toy_kernel()
+    slot = ConfigSlot({k.name: {"X": 1}})
+    cache.subscribe(lambda key, entry: slot.swap(k.name, entry.config))
+    tuner = BackgroundTuner(cache=cache, config=_tuner_cfg())
+    try:
+        job = tuner.submit(k, {"N": 1024}, provenance="heuristic")
+        assert job is not None
+        assert tuner.wait(timeout=30)
+        assert job.status is JobStatus.DONE
+        assert job.config == {"X": 8}
+        entry = cache.get(k.name, k.key_for({"N": 1024}), TPU_V5E.name)
+        assert entry is not None and entry.config == {"X": 8}
+        assert entry.shape == {"N": 1024}       # transferable to neighbours
+        assert slot.read() == ({k.name: {"X": 8}}, 1)
+    finally:
+        tuner.close()
+
+
+def test_background_tuner_deduplicates_jobs(cache):
+    k = _toy_kernel()
+    tuner = BackgroundTuner(cache=cache, config=_tuner_cfg())
+    try:
+        j1 = tuner.submit(k, {"N": 1024})
+        j2 = tuner.submit(k, {"N": 1024})
+        assert j1 is j2
+        assert tuner.wait(timeout=30)
+        assert len(tuner.jobs) == 1
+    finally:
+        tuner.close()
+
+
+def test_background_tuner_failed_search_leaves_cache_untouched(cache):
+    k = _toy_kernel(name="onl_fail", fail=True)
+    tuner = BackgroundTuner(cache=cache, config=_tuner_cfg())
+    try:
+        job = tuner.submit(k, {"N": 1024})
+        assert tuner.wait(timeout=30)
+        assert job.status is JobStatus.FAILED
+        assert job.config is None
+        assert len(cache) == 0          # nothing recorded, nothing to swap
+    finally:
+        tuner.close()
+
+
+def test_background_tuner_aborted_search_not_recorded(cache):
+    """A circuit-breaker abort (PR 3 taxonomy) may carry a partial best —
+    it must still NOT reach the cache / hot-swap path."""
+    k = _toy_kernel(name="onl_abort", fail=True)
+    tuner = BackgroundTuner(
+        cache=cache, config=_tuner_cfg(engine={"max_failures": 2}))
+    try:
+        job = tuner.submit(k, {"N": 1024})
+        assert tuner.wait(timeout=30)
+        assert job.status is JobStatus.FAILED
+        assert "aborted" in (job.error or "") or "feasible" in (job.error or "")
+        assert len(cache) == 0
+    finally:
+        tuner.close()
+
+
+def test_background_tuner_closed_refuses_jobs(cache):
+    tuner = BackgroundTuner(cache=cache, config=_tuner_cfg())
+    tuner.close()
+    assert tuner.submit(_toy_kernel(), {"N": 64}) is None
+
+
+def test_background_tuner_max_pending(cache):
+    tuner = BackgroundTuner(cache=cache,
+                            config=_tuner_cfg(max_pending=0))
+    try:
+        assert tuner.submit(_toy_kernel(), {"N": 64}) is None
+    finally:
+        tuner.close()
+
+
+# -- ServeEngine hot-swap ----------------------------------------------------
+
+def test_serve_engine_hot_swap_between_steps(model_setup, cache):
+    """A cache write mid-run() upgrades kernel_configs at the next step
+    boundary, swap_events records it, and decoded outputs are identical to
+    a never-swapped run."""
+    cfg, params = model_setup
+    # pre-seed exact entries so no background search interferes; the test
+    # drives the swap deterministically from the step hook
+    resolutions = resolve_kernel_resolutions(cfg, 2, 128, cache=cache)
+    for res in resolutions.values():
+        cache.record(res.kernel, res.key, res.profile, res.config,
+                     1.0, "full", 1, shape=res.shape)
+
+    ref_engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache)
+    for r in _requests(cfg, 4):
+        ref_engine.submit(r)
+    expected = {r.rid: list(r.output) for r in ref_engine.run()}
+
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                         online_tune=_tuner_cfg())
+    assert all(r.exact for r in engine.kernel_resolutions.values())
+    assert engine.tune_jobs == {}       # exact hits: nothing to retune
+    gemm_res = engine.kernel_resolutions["gemm"]
+    upgraded = dict(gemm_res.config, INNER_STEPS=999)
+
+    def write_upgrade(eng, step):
+        if step == 5:                   # better time -> put accepts it
+            cache.record(gemm_res.kernel, gemm_res.key, gemm_res.profile,
+                         upgraded, 0.5, "full", 1, shape=gemm_res.shape)
+
+    try:
+        for r in _requests(cfg, 4):
+            engine.submit(r)
+        done = engine.run(on_step=write_upgrade)
+        assert {r.rid: list(r.output) for r in done} == expected
+        assert engine.kernel_configs["gemm"] == upgraded
+        assert len(engine.swap_events) == 1
+        ev = engine.swap_events[0]
+        assert ev["kernels"] == ["gemm"]
+        assert 5 < ev["step"] <= 7      # landed at a later step boundary
+    finally:
+        engine.close()
+        ref_engine.close()
+
+
+def test_serve_engine_online_tunes_transfer_resolutions(model_setup, cache):
+    """End-to-end: a transfer-resolved geometry queues a real background
+    search; the winner lands in the cache and hot-swaps in; a failed job
+    (gemm's infeasible smoke shape) leaves the original config standing;
+    and a restarted engine resolves the tuned geometry exactly."""
+    cfg, params = model_setup
+    # seed a *nearby* tuned flash_attention shape -> TRANSFER provenance
+    res = resolve_kernel_resolutions(cfg, 2, 128, cache=cache)
+    fa = res["flash_attention"]
+    near_shape = dict(fa.shape, Sq=fa.shape["Sq"] * 2, Sk=fa.shape["Sk"] * 2)
+    from repro.core import resolve as resolve_kernel
+    fa_kernel = resolve_kernel("flash_attention")
+    # the borrowed config must be feasible for the serving shape too, or
+    # the transfer is (correctly) rejected — take one from its own space
+    near_cfg = next(iter(fa_kernel.make_space(fa.shape)))
+    cache.record("flash_attention", fa_kernel.key_for(near_shape),
+                 fa.profile, near_cfg, 1.0, "full", 1, shape=near_shape)
+
+    engine = ServeEngine(
+        cfg, params, slots=2, max_len=128, cache=cache,
+        online_tune=_tuner_cfg(strategy="annealing", budget=8))
+    try:
+        assert engine.kernel_resolutions["flash_attention"].provenance \
+            == "transfer"
+        assert engine.kernel_resolutions["gemm"].provenance == "heuristic"
+        assert set(engine.tune_jobs) == {"flash_attention", "gemm"}
+        original_gemm = engine.kernel_configs["gemm"]
+
+        for r in _requests(cfg, 4):
+            engine.submit(r)
+        done = engine.run()
+        # serving never blocked: every request completed while (or before)
+        # the background searches ran
+        assert len(done) == 4 and all(r.done for r in done)
+
+        assert engine.tuner.wait(timeout=60)
+        fa_job = engine.tune_jobs["flash_attention"]
+        assert fa_job.status is JobStatus.DONE
+        # winner reached the cache AND the live engine
+        entry = cache.get("flash_attention", fa.key, fa.profile)
+        assert entry is not None and entry.config == fa_job.config
+        assert engine.kernel_configs["flash_attention"] == fa_job.config
+        # gemm's smoke-shape space is infeasible: failed job, config stands
+        assert engine.tune_jobs["gemm"].status is JobStatus.FAILED
+        assert engine.kernel_configs["gemm"] == original_gemm
+
+        # a fresh engine for the same geometry now starts from an exact hit
+        engine2 = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache)
+        try:
+            assert engine2.kernel_resolutions["flash_attention"].exact
+            assert engine2.kernel_configs["flash_attention"] == fa_job.config
+        finally:
+            engine2.close()
+    finally:
+        engine.close()
+
+
+def _seed_exact(cfg, cache, slots=2, max_len=128):
+    """Record every resolution as an exact hit so no background job runs."""
+    for res in resolve_kernel_resolutions(cfg, slots, max_len,
+                                          cache=cache).values():
+        cache.record(res.kernel, res.key, res.profile, res.config,
+                     1.0, "full", 1, shape=res.shape)
+
+
+def test_serve_engine_env_var_enables_online(model_setup, cache, monkeypatch):
+    cfg, params = model_setup
+    _seed_exact(cfg, cache)
+    monkeypatch.setenv("REPRO_ONLINE_TUNE", "1")
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache)
+    try:
+        assert engine.tuner is not None
+    finally:
+        engine.close()
+    # explicit argument beats the env var
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                         online_tune=False)
+    try:
+        assert engine.tuner is None
+    finally:
+        engine.close()
+
+
+def test_serve_engine_close_detaches_from_cache(model_setup, cache):
+    cfg, params = model_setup
+    _seed_exact(cfg, cache)
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                         online_tune=_tuner_cfg())
+    gemm_res = engine.kernel_resolutions["gemm"]
+    engine.close()
+    before = engine.kernel_configs
+    cache.record(gemm_res.kernel, gemm_res.key, gemm_res.profile,
+                 dict(gemm_res.config, INNER_STEPS=999), 0.01, "full", 1)
+    assert engine.kernel_configs == before      # no swap after close
+
+
+def test_background_tuner_failed_job_can_be_resubmitted(cache):
+    """A FAILED job must not pin its geometry forever: the next submit
+    retries (a transient failure or a fixed declaration gets its search)."""
+    k_bad = _toy_kernel(name="onl_retry", fail=True)
+    k_good = _toy_kernel(name="onl_retry", fail=False)
+    tuner = BackgroundTuner(cache=cache, config=_tuner_cfg())
+    try:
+        j1 = tuner.submit(k_bad, {"N": 1024})
+        assert tuner.wait(timeout=30)
+        assert j1.status is JobStatus.FAILED
+        j2 = tuner.submit(k_good, {"N": 1024})
+        assert j2 is not j1
+        assert tuner.wait(timeout=30)
+        assert j2.status is JobStatus.DONE and j2.config == {"X": 8}
+        # DONE jobs still dedup
+        assert tuner.submit(k_good, {"N": 1024}) is j2
+    finally:
+        tuner.close()
+
+
+def test_serve_engine_rejects_truthy_non_bool_online_tune(model_setup, cache):
+    """online_tune=0 / 'off' must not silently ENABLE tuning (the PR 4
+    truthy-coercion class of bug)."""
+    cfg, params = model_setup
+    for bad in (0, 1, "off", "on", []):
+        with pytest.raises(TypeError):
+            ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                        online_tune=bad)
+
+
+def test_hot_swap_rereads_authoritative_entry(model_setup, cache):
+    """Out-of-order notifications from concurrent writers must not leave
+    the slot holding a stale (worse) config: the swap re-reads the cache,
+    whose only_if_better semantics make the current entry the best one."""
+    cfg, params = model_setup
+    _seed_exact(cfg, cache)
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                         online_tune=_tuner_cfg())
+    try:
+        res = engine.kernel_resolutions["gemm"]
+        better = dict(res.config, INNER_STEPS=111)
+        from repro.core import CacheEntry
+        import time as _time
+        stale = CacheEntry(config=dict(res.config, INNER_STEPS=999),
+                           time_s=0.9, strategy="full", evaluations=1,
+                           timestamp=_time.time())
+        # a better entry lands first ...
+        cache.record(res.kernel, res.key, res.profile, better, 0.1,
+                     "full", 1, shape=res.shape)
+        assert engine.kernel_configs["gemm"] == better
+        # ... then a STALE notification is delivered late: the callback
+        # must swap the cache's current (better) entry, not the payload
+        engine._on_cache_change(
+            "|".join(f.replace("\\", "\\\\").replace("|", "\\|")
+                     for f in (res.kernel, res.key, res.profile)), stale)
+        assert engine.kernel_configs["gemm"] == better
+    finally:
+        engine.close()

@@ -47,3 +47,26 @@ def test_engine_rejects_embedding_models():
     cfg = get_config("musicgen-medium", smoke=True)
     with pytest.raises(ValueError):
         ServeEngine(cfg, params=None)
+
+
+def test_engine_max_steps_returns_unfinished_flagged(setup, caplog):
+    """Hitting max_steps must not silently drop in-flight/queued requests:
+    they come back flagged done=False (with a logged truncation warning)
+    and a subsequent run() resumes them."""
+    cfg, params = setup
+    engine = ServeEngine(cfg, params, slots=1, max_len=128)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new_tokens=6)
+            for i in range(2)]          # 2 requests, 1 slot: one stays queued
+    for r in reqs:
+        engine.submit(r)
+    import logging
+    with caplog.at_level(logging.WARNING, logger="repro.serve"):
+        out = engine.run(max_steps=3)
+    # every submitted request is accounted for, none silently dropped
+    assert {r.rid for r in out} == {0, 1}
+    assert not any(r.done for r in out)
+    assert any("max_steps" in rec.message for rec in caplog.records)
+    # the engine still holds them: a second run finishes the work
+    done = engine.run()
+    assert {r.rid for r in done} == {0, 1}
+    assert all(r.done and len(r.output) == 6 for r in done)
