@@ -1,0 +1,133 @@
+"""Distributed-tuning section: sharded multi-worker search + fleet merge.
+
+CLTune's GEMM case study motivates splitting one search across workers;
+this section proves the distributed plane pays for itself on the compact
+GEMM space with the deterministic analytical evaluator (``noise_sigma=0``
+— records reproducible and comparable across hosts):
+
+* ``gemm_single_full`` — single-process exhaustive full search: the
+  quality and evaluation-count baseline.
+* ``gemm_sharded_4w`` — the same space strided over 4 workers.  The
+  acceptance gates: fleet winner within 5% of the single-process best
+  AND mean per-worker evaluations <= 1/3 of the single-process count
+  (record turns ``error`` otherwise, hard-failing the CI schema gate).
+* ``gemm_islands_4w`` — 4 islands (annealing/PSO/evolutionary/random)
+  each on a small budget; shows independent strategies also reach the
+  winner at a fraction of the per-worker cost.
+* ``merge_correctness`` — two worker caches with disjoint AND
+  overlapping keys both fold into one: every key must keep the best
+  finite time (no last-writer-wins loss), counts must fold.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core import TPUAnalyticalEvaluator, TuningCache
+from repro.dtune import DistributedTuner
+from repro.kernels.matmul.ops import GEMM
+from repro.tune import tune_kernel
+
+from .common import emit
+
+SHAPE = {"M": 1024, "N": 1024, "K": 1024}
+N_WORKERS = 4
+TARGET_FACTOR = 1.05          # fleet winner must be within 5% of single
+EVAL_FRACTION = 1 / 3         # per-worker evals <= 1/3 of single count
+_EVALUATOR = {"name": "analytical", "noise_sigma": 0.0}
+
+
+def _single_baseline(tmpdir: str):
+    cache = TuningCache(os.path.join(tmpdir, "single.json"))
+    # the huge explicit budget overrides GEMM's declared default of 100,
+    # which would otherwise cap the full enumeration
+    return tune_kernel(GEMM, SHAPE, strategy="full", budget=1_000_000,
+                       cache=cache, record=False, warm_start=False,
+                       evaluator=TPUAnalyticalEvaluator(noise_sigma=0.0))
+
+
+def main() -> None:
+    tmpdir = tempfile.mkdtemp(prefix="repro-bench-dtune-")
+
+    # -- baseline: one process sweeps the whole space ----------------------
+    single = _single_baseline(tmpdir)
+    emit("dtune/gemm_single_full", single.best_time * 1e6,
+         f"evals={single.result.evaluations}", config=single.best_config,
+         evaluations=single.result.evaluations)
+
+    # -- 4-worker strided shards ------------------------------------------
+    cache = TuningCache(os.path.join(tmpdir, "sharded.json"))
+    out = DistributedTuner(GEMM, SHAPE, n_workers=N_WORKERS, mode="strided",
+                           driver="thread", cache=cache,
+                           evaluator=_EVALUATOR).run()
+    per_worker = out.per_worker_evaluations
+    within = out.best_time <= TARGET_FACTOR * single.best_time
+    cheap = per_worker <= EVAL_FRACTION * single.result.evaluations
+    ok = within and cheap and out.ok
+    emit("dtune/gemm_sharded_4w", out.best_time * 1e6,
+         (f"workers={N_WORKERS} per_worker_evals={per_worker:.1f} "
+          f"({per_worker / max(single.result.evaluations, 1):.2f}x of "
+          f"single) ratio={out.best_time / single.best_time:.4f}"
+          if ok else
+          f"sharded search regressed: within5pct={within} "
+          f"per_worker={per_worker:.1f} (need <= "
+          f"{EVAL_FRACTION * single.result.evaluations:.1f}) ok={out.ok}"),
+         status="ok" if ok else "error", config=out.best_config,
+         evaluations=int(round(per_worker)))
+
+    # -- 4 islands, small per-worker budget -------------------------------
+    cache = TuningCache(os.path.join(tmpdir, "islands.json"))
+    out = DistributedTuner(GEMM, SHAPE, n_workers=N_WORKERS, mode="islands",
+                           driver="thread", cache=cache, budget=24,
+                           warm_start=False, evaluator=_EVALUATOR).run()
+    within = out.ok and out.best_time <= TARGET_FACTOR * single.best_time
+    emit("dtune/gemm_islands_4w", out.best_time * 1e6,
+         (f"strategies={[w.shard_label.split(':')[1] for w in out.workers]} "
+          f"per_worker_evals={out.per_worker_evaluations:.1f} "
+          f"ratio={out.best_time / single.best_time:.4f}"
+          if within else
+          f"islands missed the 5% target: "
+          f"ratio={out.best_time / single.best_time:.4f}"),
+         status="ok" if within else "error",
+         evaluations=int(round(out.per_worker_evaluations)))
+
+    # -- merge correctness: best-finite-time-per-key, no LWW loss ----------
+    a = TuningCache(os.path.join(tmpdir, "worker_a.json"))
+    b = TuningCache(os.path.join(tmpdir, "worker_b.json"))
+    # overlapping key: A found 2.0s first, B later found 1.0s — a
+    # last-writer-wins merge in either direction loses one of the sides
+    a.record("k", "s0", "p", {"x": 1}, 2.0, "full", 10)
+    b.record("k", "s0", "p", {"x": 2}, 1.0, "full", 20)
+    # disjoint keys: each side alone knows one shape
+    a.record("k", "s1", "p", {"x": 3}, 3.0, "full", 5)
+    b.record("k", "s2", "p", {"x": 4}, 4.0, "full", 7)
+    a.save()
+    b.save()
+    merged = TuningCache(os.path.join(tmpdir, "merged.json"))
+    merged.merge(a.path)
+    merged.merge(b.path)
+    e0 = merged.get("k", "s0", "p")
+    checks = {
+        "best_wins": e0 is not None and e0.time_s == 1.0
+        and e0.config == {"x": 2},
+        "counts_fold": e0 is not None and e0.evaluations == 30,
+        "disjoint_union": merged.get("k", "s1", "p") is not None
+        and merged.get("k", "s2", "p") is not None
+        and len(merged) == 3,
+    }
+    # idempotence: re-merging the same data must change nothing
+    checks["idempotent"] = not merged.merge(b.path) \
+        and merged.get("k", "s0", "p").evaluations == 30
+    ok = all(checks.values())
+    emit("dtune/merge_correctness", 0.0,
+         (f"best-per-key kept across {len(merged)} keys "
+          f"(overlap winner 1.0s, evals folded to 30, remerge idempotent)"
+          if ok else
+          "merge broken: " + ", ".join(k for k, v in checks.items()
+                                       if not v)),
+         status="ok" if ok else "error")
+
+
+if __name__ == "__main__":
+    main()

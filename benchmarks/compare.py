@@ -23,11 +23,13 @@ is one the benchmark silently stopped measuring, i.e. coverage loss that
 would otherwise masquerade as a timing change.
 
 Records may also carry an ``evaluations`` count.  Where the count is a
-search-efficiency metric (the transfer section's evals-to-within-5%),
-growth beyond ``--evals-threshold`` (relative, default 0.25) versus the
-baseline is a regression too: a warm-started search that needs more
-evaluations to reach target than it used to has lost the very thing the
-warm start buys.  These counts come from seeded searches over the
+search-efficiency metric (the transfer section's evals-to-within-5%, the
+dtune section's per-worker evaluations), growth beyond
+``--evals-threshold`` (relative, default 0.25) versus the baseline is a
+regression too: a warm-started search that needs more evaluations to
+reach target than it used to has lost the very thing the warm start
+buys, and a sharded fleet whose per-worker count grew has lost its
+parallel speedup.  These counts come from seeded searches over the
 deterministic analytical model, so they are stable across hosts.
 """
 

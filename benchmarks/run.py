@@ -14,7 +14,8 @@ inferred from stdout.  Any failed section makes the driver exit 1.
 Env knobs:
   REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
   REPRO_BENCH_ONLY   comma-separated subset
-                     (conv,gemm,roofline,wallclock,engine,transfer,online)
+                     (conv,gemm,roofline,wallclock,engine,transfer,online,
+                      dtune)
   REPRO_BENCH_OUT    output directory for BENCH_*.json
 """
 
@@ -67,8 +68,9 @@ def write_payload(name: str, payload: Dict[str, Any]) -> str:
 def main() -> None:
     only = os.environ.get("REPRO_BENCH_ONLY", "")
     wanted = set(only.split(",")) if only else None
-    from . import (bench_conv, bench_engine, bench_gemm, bench_online,
-                   bench_roofline, bench_transfer, bench_wallclock)
+    from . import (bench_conv, bench_dtune, bench_engine, bench_gemm,
+                   bench_online, bench_roofline, bench_transfer,
+                   bench_wallclock)
     table = {
         "conv": bench_conv.main,          # paper §V: Figs 4/5/6, Tables II/III
         "gemm": bench_gemm.main,          # paper §VI: Fig 7, Table IV, Fig 9
@@ -77,6 +79,7 @@ def main() -> None:
         "engine": bench_engine.main,      # EvaluationEngine: dedup/prune/overlap
         "transfer": bench_transfer.main,  # nearest-shape reuse + warm start
         "online": bench_online.main,      # background retune + config hot-swap
+        "dtune": bench_dtune.main,        # sharded workers + fleet cache merge
     }
     print("name,us_per_call,derived")
     sections: Dict[str, Dict[str, Any]] = {}

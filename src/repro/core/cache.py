@@ -17,6 +17,25 @@ Cache format v2:
   dimensions the entry was tuned for), which powers nearest-shape config
   transfer (:meth:`TuningCache.nearest`).  Entries written before v2
   simply lack the field and load with ``shape=None``.
+* entries may carry a ``failures`` count (how many configs failed during
+  the search behind this winner); absent means 0 and legacy entries stay
+  byte-stable on save.
+
+Fleet merge (the distributed-tuning half, :mod:`repro.dtune`): many
+workers/replicas tune into *independent* caches that must converge on one
+database.  Last-writer-wins is wrong — a replica saving a stale snapshot
+would silently erase a better winner another replica just wrote.  Instead:
+
+* :meth:`TuningCache.merge` folds another cache (object, file path or raw
+  dict) into this one, keeping the **best finite** ``time_s`` per key,
+  unioning ``shape`` information and folding evaluation/failure counts;
+* :meth:`TuningCache.save` defaults to ``merge_on_disk=True``: it takes a
+  cross-process file lock, re-reads the file, merges it into memory and
+  atomically replaces the file — so concurrent savers converge on the
+  union-of-best instead of clobbering each other;
+* both fire the changed-entry subscribers, so a merged-in winner from
+  another process hot-swaps into live serving engines exactly like a
+  locally tuned one.
 """
 
 from __future__ import annotations
@@ -29,7 +48,12 @@ import os
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
+
+try:                                    # POSIX: real advisory file locks
+    import fcntl
+except ImportError:                     # pragma: no cover - non-POSIX hosts
+    fcntl = None
 
 log = logging.getLogger("repro.cache")
 
@@ -43,6 +67,60 @@ _ENV_VAR = "REPRO_TUNE_CACHE"
 
 def _default_path() -> str:
     return os.environ.get(_ENV_VAR) or _DEFAULT_PATH
+
+
+class _FileLock:
+    """Advisory cross-process lock guarding read-modify-write of one file.
+
+    ``fcntl.flock`` on a sibling ``<path>.lock`` file where available
+    (POSIX); elsewhere an ``O_CREAT|O_EXCL`` spin lock with a staleness
+    timeout.  Only the merge-on-disk save path takes it, so two processes
+    syncing the same ``tuned_configs.json`` serialize their
+    read-merge-replace cycles instead of interleaving them.
+    """
+
+    def __init__(self, path: str, timeout_s: float = 30.0,
+                 poll_s: float = 0.02):
+        self.path = path
+        self.timeout_s = timeout_s
+        self.poll_s = poll_s
+        self._fd: Optional[int] = None
+        self._owns_file = False
+
+    def __enter__(self) -> "_FileLock":
+        if fcntl is not None:
+            self._fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(self._fd, fcntl.LOCK_EX)
+            return self
+        deadline = time.monotonic() + self.timeout_s      # pragma: no cover
+        while True:
+            try:
+                self._fd = os.open(self.path,
+                                   os.O_CREAT | os.O_EXCL | os.O_RDWR, 0o644)
+                self._owns_file = True
+                return self
+            except FileExistsError:
+                if time.monotonic() > deadline:
+                    # a crashed holder must not wedge every later save
+                    log.warning("cache: breaking stale lock %s", self.path)
+                    try:
+                        os.unlink(self.path)
+                    except OSError:
+                        pass
+                time.sleep(self.poll_s)
+
+    def __exit__(self, *exc) -> None:
+        if self._fd is not None:
+            if fcntl is not None:
+                fcntl.flock(self._fd, fcntl.LOCK_UN)
+            os.close(self._fd)
+            self._fd = None
+        if self._owns_file:                               # pragma: no cover
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+            self._owns_file = False
 
 
 # -- key encoding -------------------------------------------------------------
@@ -146,11 +224,16 @@ class CacheEntry:
     #: entries written before the field existed — those can be looked up by
     #: exact key but cannot participate in nearest-shape transfer
     shape: Optional[Dict[str, Any]] = None
+    #: failed configs behind this winner's search (folded on merge); 0 on
+    #: entries written before the field existed
+    failures: int = 0
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         if d.get("shape") is None:
             del d["shape"]               # keep legacy entries byte-stable
+        if not d.get("failures"):
+            del d["failures"]            # same: omit the zero default
         return d
 
     @classmethod
@@ -191,37 +274,52 @@ class TuningCache:
         #: changed-entry subscribers: fn(key, CacheEntry), called after a
         #: successful put() (see subscribe())
         self._subscribers: List[Callable[[str, "CacheEntry"], None]] = []
+        #: memoized (kernel, profile) -> [(key, decoded entry with shape)];
+        #: None = stale, rebuilt by the next nearest() (see _invalidate)
+        self._shape_index: Optional[
+            Dict[Tuple[str, str], List[Tuple[str, CacheEntry]]]] = None
 
     # -- persistence ---------------------------------------------------------
+    @staticmethod
+    def _sanitize(data: Dict[str, Any]) -> Dict[str, Any]:
+        """Normalize raw file/peer data in place: drop malformed and
+        non-finite entries, migrate legacy (v1) raw-join keys."""
+        # entries must be objects with a finite numeric time_s: files
+        # written before the strict-JSON change may carry Infinity/NaN
+        # (json.load accepts them), and a merge peer may hand us garbage —
+        # drop both here so save(), which refuses non-finite values,
+        # cannot crash on foreign poison and lose the fresh results
+        bad = [k for k, v in data.items()
+               if not isinstance(v, dict)
+               or not isinstance(v.get("time_s"), (int, float))
+               or isinstance(v.get("time_s"), bool)
+               or not math.isfinite(v["time_s"])]
+        for k in bad:
+            log.warning("cache: dropping malformed/non-finite entry %r", k)
+            del data[k]
+        # v1 keys joined fields with raw "|": a shape_key containing
+        # the separator is unparseable (and can collide with a v2
+        # escaped key), so re-encode it under the escaped form
+        for k in [k for k in data if _migrate_key(k) is not None]:
+            new = _migrate_key(k)
+            if new in data:
+                log.warning("cache: legacy key %r collides with %r; "
+                            "keeping the existing entry", k, new)
+            else:
+                log.info("cache: migrating legacy key %r -> %r", k, new)
+                data[new] = data[k]
+            del data[k]
+        return data
+
+    def _read_file(self) -> Dict[str, Any]:
+        with open(self.path, "r") as f:
+            return self._sanitize(json.load(f))
+
     def _load_locked(self) -> None:
         if os.path.exists(self.path):
-            with open(self.path, "r") as f:
-                data = json.load(f)
-            # files written before the strict-JSON change may carry
-            # Infinity/NaN times; drop them here so the next save() —
-            # which refuses non-finite values — cannot crash on legacy
-            # poison and lose the fresh results
-            bad = [k for k, v in data.items()
-                   if isinstance(v, dict)
-                   and isinstance(v.get("time_s"), float)
-                   and not math.isfinite(v["time_s"])]
-            for k in bad:
-                log.warning("cache: dropping legacy non-finite entry %r", k)
-                del data[k]
-            # v1 keys joined fields with raw "|": a shape_key containing
-            # the separator is unparseable (and can collide with a v2
-            # escaped key), so re-encode it under the escaped form
-            for k in [k for k in data if _migrate_key(k) is not None]:
-                new = _migrate_key(k)
-                if new in data:
-                    log.warning("cache: legacy key %r collides with %r; "
-                                "keeping the existing entry", k, new)
-                else:
-                    log.info("cache: migrating legacy key %r -> %r", k, new)
-                    data[new] = data[k]
-                del data[k]
-            self._data = data
+            self._data = self._read_file()
         self._loaded = True
+        self._shape_index = None
 
     def _ensure_loaded(self) -> None:
         if not self._loaded:
@@ -232,21 +330,152 @@ class TuningCache:
             self._load_locked()
         return self
 
-    def save(self) -> None:
+    def _write_locked(self) -> None:
+        # atomic write: temp file + rename, same discipline as checkpoints
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                # strict JSON: raise rather than emit Infinity/NaN
+                json.dump(self._data, f, indent=2, sort_keys=True,
+                          allow_nan=False)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def save(self, merge_on_disk: bool = True) -> None:
+        """Persist the cache.
+
+        With ``merge_on_disk`` (the default) the write is a synchronized
+        read-merge-replace: take the cross-process file lock, re-read the
+        file, fold it into memory under the best-finite-time-per-key rule
+        and atomically replace the file.  Entries another process wrote
+        since our load are *kept* (and folded into memory), so concurrent
+        savers converge on the union-of-best instead of the last writer
+        silently erasing the others — the failure mode the old
+        whole-dict dump had.  Changed-entry subscribers fire for every
+        entry the disk merge improved or added (the fleet-propagation
+        hook).  ``merge_on_disk=False`` is the legacy overwrite (used by
+        tests and explicit wipes after :meth:`clear`).
+        """
+        changed: Dict[str, CacheEntry] = {}
         with self._lock:
+            self._ensure_loaded()
             os.makedirs(os.path.dirname(self.path), exist_ok=True)
-            # atomic write: temp file + rename, same discipline as checkpoints
-            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
-                                       suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    # strict JSON: raise rather than emit Infinity/NaN
-                    json.dump(self._data, f, indent=2, sort_keys=True,
-                              allow_nan=False)
-                os.replace(tmp, self.path)
-            finally:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
+            if merge_on_disk:
+                with _FileLock(self.path + ".lock"):
+                    if os.path.exists(self.path):
+                        changed = self._merge_locked(self._read_file())
+                    self._write_locked()
+            else:
+                self._write_locked()
+            subscribers = list(self._subscribers)
+        self._notify(changed, subscribers)
+
+    # -- merge ----------------------------------------------------------------
+    @staticmethod
+    def _fold(mine: Dict[str, Any], theirs: Dict[str, Any]
+              ) -> Optional[Dict[str, Any]]:
+        """Fold two raw entries for one key; None = ``mine`` stands.
+
+        Last-writer-wins is wrong here: the rule is best-finite-``time_s``
+        per key.  The loser still contributes what it knows — a structured
+        ``shape`` the winner lacks (union), and its evaluation/failure
+        counts, which are *summed* when the two entries describe different
+        search results (total fleet effort behind the surviving winner)
+        but *maxed* when they describe the same result (so re-merging the
+        same file over and over stays idempotent instead of inflating the
+        counters on every sync).
+        """
+        if mine == theirs:
+            return None
+        win, lose = ((mine, theirs) if mine["time_s"] <= theirs["time_s"]
+                     else (theirs, mine))
+        out = dict(win)
+        same_result = (win.get("config") == lose.get("config")
+                       and win["time_s"] == lose["time_s"])
+        fold = max if same_result else (lambda a, b: a + b)
+        out["evaluations"] = fold(int(win.get("evaluations") or 0),
+                                  int(lose.get("evaluations") or 0))
+        failures = fold(int(win.get("failures") or 0),
+                        int(lose.get("failures") or 0))
+        if failures:
+            out["failures"] = failures
+        elif "failures" in out:
+            del out["failures"]
+        if out.get("shape") is None and lose.get("shape") is not None:
+            out["shape"] = lose["shape"]          # union shape knowledge
+        out["timestamp"] = max(win.get("timestamp") or 0,
+                               lose.get("timestamp") or 0)
+        return None if out == mine else out
+
+    def _merge_locked(self, incoming: Dict[str, Any]
+                      ) -> Dict[str, CacheEntry]:
+        """Fold sanitized raw ``incoming`` into ``self._data``; returns the
+        entries that changed (added or improved), decoded."""
+        changed: Dict[str, CacheEntry] = {}
+        for key, theirs in incoming.items():
+            mine = self._data.get(key)
+            merged = dict(theirs) if mine is None else self._fold(mine, theirs)
+            if merged is None:
+                continue
+            self._data[key] = merged
+            # only an actual winner change matters to subscribers (count
+            # folding alone does not swap any serving config)
+            if mine is None or merged.get("config") != mine.get("config") \
+                    or merged.get("time_s") != mine.get("time_s"):
+                changed[key] = CacheEntry.from_json(merged)
+        if changed:
+            self._shape_index = None
+        return changed
+
+    def merge(self, other: "Union[TuningCache, str, Mapping[str, Any]]"
+              ) -> Dict[str, CacheEntry]:
+        """Fold another cache into this one (in memory; call :meth:`save`
+        to persist).  ``other`` is a :class:`TuningCache`, a path to a
+        cache JSON file, or a raw ``{key: entry}`` mapping.  Per key the
+        best finite ``time_s`` wins, shapes are unioned and
+        evaluation/failure counts folded (see :meth:`_fold`); subscribers
+        fire for every changed entry, so merged-in fleet winners reach
+        live serving engines like locally tuned ones.  Returns the
+        changed entries."""
+        if isinstance(other, TuningCache):
+            with other._lock:
+                other._ensure_loaded()
+                incoming = {k: dict(v) for k, v in other._data.items()}
+            incoming = self._sanitize(incoming)
+        elif isinstance(other, str):
+            if not os.path.exists(other):
+                raise FileNotFoundError(f"no cache file at {other!r}")
+            with open(other, "r") as f:
+                incoming = self._sanitize(json.load(f))
+        elif isinstance(other, Mapping):
+            incoming = self._sanitize(
+                {k: dict(v) if isinstance(v, Mapping) else v
+                 for k, v in other.items()})
+        else:
+            raise TypeError("merge() takes a TuningCache, a path or a "
+                            f"mapping, got {type(other).__name__}")
+        with self._lock:
+            self._ensure_loaded()
+            changed = self._merge_locked(incoming)
+            subscribers = list(self._subscribers)
+        self._notify(changed, subscribers)
+        return changed
+
+    def _notify(self, changed: Dict[str, CacheEntry],
+                subscribers: List[Callable[[str, "CacheEntry"], None]]
+                ) -> None:
+        """Fire subscribers outside the lock (same contract as put())."""
+        if not changed:
+            return
+        for key, entry in changed.items():
+            for fn in subscribers:
+                try:
+                    fn(key, entry)
+                except Exception:  # noqa: BLE001 — a bad subscriber must not
+                    log.exception("cache: change subscriber %r failed", fn)
 
     # -- access ---------------------------------------------------------------
     def get(self, kernel: str, shape_key: str, profile: str) -> Optional[CacheEntry]:
@@ -268,6 +497,7 @@ class TuningCache:
             if only_if_better and old and old["time_s"] <= entry.time_s:
                 return False
             self._data[k] = entry.to_json()
+            self._shape_index = None
             subscribers = list(self._subscribers)
         # notify outside the lock: a subscriber may itself read the cache
         # (or take other locks) without deadlocking a concurrent writer
@@ -307,11 +537,13 @@ class TuningCache:
     def record(self, kernel: str, shape_key: str, profile: str,
                config: Dict[str, Any], time_s: float, strategy: str,
                evaluations: int,
-               shape: Optional[Mapping[str, Any]] = None) -> bool:
+               shape: Optional[Mapping[str, Any]] = None,
+               failures: int = 0) -> bool:
         """Record a tuning winner; refuses non-finite times (a failed tune
         must never poison the cache other tools parse).  ``shape`` is the
         structured problem-dimension dict that makes the entry eligible
-        for nearest-shape transfer."""
+        for nearest-shape transfer; ``failures`` how many configs failed
+        during the search behind this winner (folded on fleet merge)."""
         if not math.isfinite(time_s):
             log.warning("cache: refusing to record non-finite time_s=%r "
                         "for kernel=%r shape=%r", time_s, kernel, shape_key)
@@ -319,9 +551,39 @@ class TuningCache:
         return self.put(kernel, shape_key, profile, CacheEntry(
             config=config, time_s=time_s, strategy=strategy,
             evaluations=evaluations, timestamp=time.time(),
-            shape=dict(shape) if shape is not None else None))
+            shape=dict(shape) if shape is not None else None,
+            failures=int(failures)))
 
     # -- shape transfer --------------------------------------------------------
+    def _shape_bucket(self, kernel: str, profile: str
+                      ) -> List[Tuple[str, CacheEntry]]:
+        """Decoded shape-carrying entries for (kernel, profile), memoized.
+
+        The serve-path transfer lookup calls :meth:`nearest` on every
+        cache miss; re-decoding the whole file each time is O(N) JSON
+        work per lookup.  The index is invalidated (set to None) on
+        put/load/merge/clear and rebuilt lazily here.  Buckets are never
+        mutated in place, so a caller holding one across an invalidation
+        still sees a consistent snapshot.
+        """
+        with self._lock:
+            self._ensure_loaded()
+            if self._shape_index is None:
+                self._shape_index = {}
+            bucket = self._shape_index.get((kernel, profile))
+            if bucket is None:
+                bucket = []
+                for key, raw in self._data.items():
+                    fields = split_key(key)
+                    if len(fields) != 3 or fields[0] != kernel \
+                            or fields[2] != profile:
+                        continue
+                    entry = CacheEntry.from_json(raw)
+                    if entry.shape is not None:
+                        bucket.append((key, entry))
+                self._shape_index[(kernel, profile)] = bucket
+            return bucket
+
     def nearest(self, kernel: str, shape: Mapping[str, Any], profile: str,
                 k: int = 3) -> List[CacheEntry]:
         """The ``k`` tuned entries for (kernel, profile) nearest to ``shape``.
@@ -330,30 +592,34 @@ class TuningCache:
         dims), nearest first; an exact-shape entry sorts first with
         distance 0.  Entries without a structured ``shape`` (pre-v2) and
         entries at infinite distance (no shared dims / mismatched
-        non-numeric dims) are excluded.
+        non-numeric dims) are excluded.  Served from a per-(kernel,
+        profile) memoized index; returned entries are copies, safe to
+        mutate.
         """
-        with self._lock:
-            self._ensure_loaded()
-            snapshot = dict(self._data)
         scored: List[Tuple[float, str, CacheEntry]] = []
-        for key, raw in snapshot.items():
-            fields = split_key(key)
-            if len(fields) != 3 or fields[0] != kernel or fields[2] != profile:
-                continue
-            entry = CacheEntry.from_json(raw)
-            if entry.shape is None:
-                continue
+        for key, entry in self._shape_bucket(kernel, profile):
             d = shape_distance(shape, entry.shape)
             if math.isfinite(d):
                 scored.append((d, key, entry))
         scored.sort(key=lambda t: (t[0], t[1]))
-        return [entry for _, _, entry in scored[:max(0, k)]]
+        # hand out copies: the index memoizes these objects, and a caller
+        # mutating e.config (warm-start seeds do) must not poison it
+        return [dataclasses.replace(
+                    e, config=dict(e.config),
+                    shape=dict(e.shape) if e.shape is not None else None)
+                for _, _, e in scored[:max(0, k)]]
 
     def clear(self, delete_file: bool = False) -> None:
-        """Drop all in-memory entries; optionally unlink the backing file."""
+        """Drop all in-memory entries; optionally unlink the backing file.
+
+        NB: without ``delete_file``, a later ``save()`` (which merges the
+        disk state back in by default) resurrects the file's entries —
+        pass ``delete_file=True`` or ``save(merge_on_disk=False)`` for a
+        true wipe."""
         with self._lock:
             self._data = {}
             self._loaded = True
+            self._shape_index = None
             if delete_file and os.path.exists(self.path):
                 os.unlink(self.path)
 
@@ -364,13 +630,18 @@ class TuningCache:
 
 
 _default_cache: Optional[TuningCache] = None
+_default_cache_lock = threading.Lock()
 
 
 def default_cache() -> TuningCache:
     """The process-wide cache.  Re-resolved when REPRO_TUNE_CACHE changes,
-    so tests can monkeypatch the env var and get a fresh isolated cache."""
+    so tests can monkeypatch the env var and get a fresh isolated cache.
+    Guarded by a module lock: two threads resolving simultaneously must
+    share ONE TuningCache (its internal RLock is what makes concurrent
+    put/get safe — two objects for one path would race on the file)."""
     global _default_cache
     path = os.path.abspath(_default_path())
-    if _default_cache is None or _default_cache.path != path:
-        _default_cache = TuningCache(path)
-    return _default_cache
+    with _default_cache_lock:
+        if _default_cache is None or _default_cache.path != path:
+            _default_cache = TuningCache(path)
+        return _default_cache

@@ -91,6 +91,12 @@ class EngineConfig:
     #: Size it relative to the budget — it exists to catch spaces that are
     #: systematically broken (bad spec, wrong shapes), not hostile ones.
     max_failures: Optional[int] = None
+    #: cooperative cancellation: any object with ``is_set() -> bool``
+    #: (threading/multiprocessing Event).  Checked between batches; when
+    #: set, the run stops gracefully and returns the partial result
+    #: (``extra["aborted"]["stopped"] = True``) — the distributed
+    #: coordinator uses this to reel in workers early.
+    stop_event: Optional[Any] = None
 
     def __post_init__(self):
         if self.workers is None:
@@ -308,13 +314,13 @@ class EvaluationEngine:
                                         self.stats.evaluations, limit)
 
     def _partial_result(self, strategy: Strategy,
-                        tripped: CircuitBreakerTripped) -> SearchResult:
+                        aborted: Dict[str, Any]) -> SearchResult:
         """Synthesize a SearchResult from the evaluations already told.
 
         The driver may be mid-generation (or, for the thread-bridged
-        sequential fallback, mid-``run``) when the breaker trips, so the
-        engine's own tell-order history — not the driver — is the source
-        of truth for an aborted search.
+        sequential fallback, mid-``run``) when the breaker trips or a
+        stop is requested, so the engine's own tell-order history — not
+        the driver — is the source of truth for an aborted search.
         """
         trials = [Trial(config=c, time=t, index=i)
                   for i, (c, t) in enumerate(self._history)]
@@ -322,11 +328,8 @@ class EvaluationEngine:
         for t in trials:
             if t.ok and (best is None or t.time < best.time):
                 best = t
-        return SearchResult(
-            strategy.name, trials, best, len(trials),
-            extra={"aborted": {"reason": str(tripped),
-                               "failures": len(self.failures),
-                               "max_failures": tripped.limit}})
+        return SearchResult(strategy.name, trials, best, len(trials),
+                            extra={"aborted": aborted})
 
     def _attach_failures(self, result: SearchResult) -> None:
         """Give every failed trial its FailureRecord (by config identity)."""
@@ -372,9 +375,16 @@ class EvaluationEngine:
         self.stats = EngineStats()
         self._incumbent = math.inf
         self._history = []
-        tripped: Optional[CircuitBreakerTripped] = None
+        aborted: Optional[Dict[str, Any]] = None
         try:
-            while tripped is None:
+            while aborted is None:
+                if cfg.stop_event is not None and cfg.stop_event.is_set():
+                    # cooperative cancellation: finish with what we have
+                    self.stats.aborted = True
+                    aborted = {"reason": "stop requested",
+                               "failures": len(self.failures),
+                               "stopped": True}
+                    break
                 batch = driver.ask()
                 if not batch:
                     break
@@ -415,17 +425,19 @@ class EvaluationEngine:
                         try:
                             self._record_failure(key, failure)
                         except CircuitBreakerTripped as t:
-                            tripped = t
+                            aborted = {"reason": str(t),
+                                       "failures": len(self.failures),
+                                       "max_failures": t.limit}
                             self.stats.aborted = True
                             break
                 # a partial tell (breaker mid-batch) is fine: every driver
                 # accepts fewer results than it asked for
                 if results:
                     driver.tell(results)
-            if tripped is None:
+            if aborted is None:
                 result = driver.result()
             else:
-                result = self._partial_result(strategy, tripped)
+                result = self._partial_result(strategy, aborted)
         finally:
             driver.close()
             if pool is not None:

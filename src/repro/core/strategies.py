@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import itertools
 import logging
 import math
 import queue
@@ -213,14 +214,31 @@ class FullSearch(Strategy):
 
     Warm-start seeds are meaningless here (every feasible config is
     visited anyway) and are ignored.
+
+    ``offset``/``stride`` slice the enumeration for sharded distributed
+    search: worker *i* of *n* runs ``FullSearch(offset=i, stride=n)`` and
+    the *n* shards partition the feasible space exactly (every config
+    visited once, by exactly one worker).
     """
 
     name = "full"
 
+    def __init__(self, offset: int = 0, stride: int = 1):
+        if stride < 1:
+            raise ValueError("stride must be >= 1")
+        if not 0 <= offset < stride:
+            raise ValueError(f"offset must be in [0, stride); got "
+                             f"offset={offset} stride={stride}")
+        self.offset = offset
+        self.stride = stride
+
+    def _configs(self, space: SearchSpace):
+        return itertools.islice(iter(space), self.offset, None, self.stride)
+
     def run(self, space, objective, budget=None, seed=0,
             seeds=None) -> SearchResult:
         rec = _Recorder(space, objective)
-        for i, cfg in enumerate(space):
+        for i, cfg in enumerate(self._configs(space)):
             if budget is not None and i >= budget:
                 break
             rec.evaluate(cfg)
@@ -697,7 +715,7 @@ class _FullSearchAskTell(AskTellDriver):
     def __init__(self, strategy: FullSearch, space: SearchSpace,
                  budget: Optional[int], chunk: int = 64):
         self.strategy = strategy
-        self._iter = iter(space)
+        self._iter = strategy._configs(space)
         self._budget = math.inf if budget is None else budget
         self._chunk = chunk
         self._rec = _BatchRecorder()

@@ -302,6 +302,7 @@ class Tuner:
             cache.record(self._spec.name, shape_key or "default",
                          self.profile.name, result.best.config,
                          result.best.time, result.strategy,
-                         result.evaluations, shape=shape)
+                         result.evaluations, shape=shape,
+                         failures=len(eng.failures))
             cache.save()
         return outcome

@@ -304,7 +304,10 @@ class BackgroundTuner:
                           job.config, outcome.best_time,
                           outcome.result.strategy,
                           outcome.result.evaluations, shape=job.shape)
-        self.cache.save()
+        # merge-on-disk: other replicas retuning into the same file keep
+        # their winners (best time per key) — and any better entry found
+        # on disk merges back in, firing the same hot-swap subscribers
+        self.cache.save(merge_on_disk=True)
         job.status = JobStatus.DONE
         log.info("online: retune %s %s done: %s (%.3g s, %d evals)",
                  job.kernel, job.shape, job.config, outcome.best_time,

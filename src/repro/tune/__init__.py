@@ -6,11 +6,13 @@ per-kernel conveniences (``tune_matmul`` etc.) are kept as lazy re-exports
 for compatibility — they are thin delegates to ``tune_kernel`` now.
 """
 
-from .api import TuningSession, tune_kernel, warm_start_seeds
+from .api import (TuningSession, tune_kernel, tune_kernel_distributed,
+                  warm_start_seeds)
 from .sharding_autotune import (CellObjective, build_space,
                                 config_to_run_rules, tune_cell)
 
-__all__ = ["TuningSession", "tune_kernel", "warm_start_seeds",
+__all__ = ["TuningSession", "tune_kernel", "tune_kernel_distributed",
+           "warm_start_seeds",
            "CellObjective", "build_space", "config_to_run_rules",
            "tune_cell",
            "tune_flash_attention", "tune_conv2d", "tune_matmul"]

@@ -110,6 +110,46 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                       **strategy_kwargs)
 
 
+def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
+                            n_workers: Optional[int] = None,
+                            mode: Optional[str] = None,
+                            driver: Optional[str] = None,
+                            profile: DeviceProfile = TPU_V5E,
+                            evaluator: Any = None,
+                            cache: Optional[TuningCache] = None,
+                            budget: Optional[int] = None,
+                            engine: "EngineConfig | Dict[str, Any] | None"
+                            = None,
+                            interpret: bool = True,
+                            extended_space: Optional[bool] = None,
+                            warm_start: "bool | int" = True,
+                            seed: int = 0,
+                            record: bool = True,
+                            timeout_s: Optional[float] = None):
+    """Tune one kernel for one shape across a worker fleet.
+
+    The distributed counterpart of :func:`tune_kernel`: the search space
+    is sharded over ``n_workers`` (default ``$REPRO_DTUNE_WORKERS`` or 4)
+    in ``mode`` ``"strided"`` (exact partition, exhaustive — default) or
+    ``"islands"`` (per-worker annealing/PSO/evolutionary/random with
+    warm-start seeds), run on the ``"thread"`` or ``"process"`` driver,
+    and the per-worker results are folded into the shared cache under the
+    best-finite-time-per-key merge rule.  ``budget`` is *per worker*.
+    Returns a :class:`repro.dtune.DistributedOutcome`.
+
+    Note ``evaluator`` here is a *spec* (``make_evaluator`` name or
+    ``{"name": ..., **kwargs}`` dict, or a live instance for the thread
+    driver) so it can cross process boundaries.
+    """
+    from ..dtune import DistributedTuner      # lazy: dtune sits above us
+    tuner = DistributedTuner(
+        kernel, shape, n_workers=n_workers, mode=mode, driver=driver,
+        profile=profile, evaluator=evaluator, cache=cache, budget=budget,
+        engine=engine, interpret=interpret, extended_space=extended_space,
+        warm_start=warm_start, seed=seed, record=record)
+    return tuner.run(timeout_s=timeout_s)
+
+
 @dataclasses.dataclass
 class _WorkItem:
     kernel: TunableKernel
@@ -210,7 +250,10 @@ class TuningSession:
                      "no feasible config" if best is None
                      else f"{best.time * 1e6:.1f} us {best.config}")
         if save:
-            self.cache.save()
+            # merge-on-disk: a concurrent session/replica saving the same
+            # file keeps its entries too (best time per key), instead of
+            # this whole-dict write erasing them
+            self.cache.save(merge_on_disk=True)
         return dict(self.outcomes)
 
     def report(self) -> str:
