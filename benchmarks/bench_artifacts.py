@@ -1,0 +1,153 @@
+"""Compile-artifact cache section: cold vs warm-store compiles-per-search.
+
+The persistent artifact store (``repro.core.artifacts``) is supposed to
+make repeat searches compile-free: every ``prepare()`` that lowers to an
+HLO fingerprint already in the store must come back as a hit instead of
+a fresh XLA compile.  This section proves that end to end on a small
+probe kernel whose search space lowers to 8 distinct artifacts:
+
+* ``probe_cold_store`` — first ``tune_kernel()`` full search against an
+  empty store: every unique config costs exactly one fresh compile
+  (the per-search compile baseline the gate compares against).
+* ``probe_warm_store`` — the identical second search against the warm
+  store.  The acceptance gate: **0 fresh compiles** — every prepare is
+  a store hit (record turns ``error`` otherwise, hard-failing CI).
+* ``dtune_shared_store_4w`` — a 4-worker strided ``DistributedTuner``
+  fleet sharing one store directory.  Gates: fleet-wide each distinct
+  artifact is compiled **at most once** (the flock in
+  ``ArtifactStore.get_or_compute`` makes racing workers converge on a
+  single compile), and a warm rerun of the whole fleet performs 0
+  fresh compiles.
+
+Records carry a ``compiles`` count (fresh XLA compiles behind the row);
+``benchmarks/compare.py`` gates on growth versus the baseline — a warm
+search whose compile count creeps above 0 has lost exactly the thing
+the store buys.  The probe's analytical cost model is deterministic, so
+counts are stable across hosts.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (REGISTRY, ArtifactStore, CostModelEvaluator,
+                        SearchSpace, TuningCache, tunable)
+from repro.dtune import DistributedTuner
+from repro.tune import tune_kernel
+
+from .common import emit
+
+PROBE = "artifact-probe-bench"
+N_WORKERS = 4
+_SPACE_K = (1.0, 2.0, 3.0, 4.0)
+_SPACE_B = (0.5, 1.5)
+N_ARTIFACTS = len(_SPACE_K) * len(_SPACE_B)    # 8 distinct lowered HLOs
+
+
+def _register_probe() -> None:
+    """Register the probe tunable once (idempotent across reruns)."""
+    if PROBE in REGISTRY:
+        return
+
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="k", values=_SPACE_K)
+        sp.add_parameter(name="b", values=_SPACE_B)
+        return sp
+
+    # both parameters reach the kernel body, so every config lowers to a
+    # distinct HLO fingerprint — 8 configs, 8 artifacts, no aliasing
+    @tunable(name=PROBE, space=space,
+             heuristic=lambda s: {"k": 1.0, "b": 0.5},
+             arg_specs=lambda s: (jax.ShapeDtypeStruct((8, 8), jnp.float32),))
+    def probe(shape, config, interpret=True):
+        return lambda x: x * float(config["k"]) + float(config["b"])
+
+
+def _search(store: ArtifactStore, cache_path: str):
+    ev = CostModelEvaluator()
+    out = tune_kernel(PROBE, {"N": 8}, strategy="full",
+                      cache=TuningCache(cache_path), record=False,
+                      warm_start=False, evaluator=ev, artifact_store=store)
+    return out, out.engine_stats or {}
+
+
+def main() -> None:
+    _register_probe()
+    tmpdir = tempfile.mkdtemp(prefix="repro-bench-artifacts-")
+    store_dir = os.path.join(tmpdir, "store")
+
+    # -- cold store: every unique config is one fresh compile --------------
+    store = ArtifactStore(store_dir)
+    out, stats = _search(store, os.path.join(tmpdir, "cold.json"))
+    unique = stats.get("unique_configs", 0)
+    fresh = store.stats.compiles
+    ok = (unique == N_ARTIFACTS and fresh == len(store)
+          and fresh + stats.get("artifact_hits", 0) == unique)
+    emit("artifacts/probe_cold_store", out.best_time * 1e6,
+         (f"unique={unique} fresh_compiles={fresh} "
+          f"store_entries={len(store)}"
+          if ok else
+          f"cold accounting broken: unique={unique} fresh={fresh} "
+          f"entries={len(store)} hits={stats.get('artifact_hits')}"),
+         status="ok" if ok else "error", config=out.best_config,
+         evaluations=out.result.evaluations, engine=stats, compiles=fresh)
+
+    # -- warm store: the identical search must be compile-free -------------
+    store = ArtifactStore(store_dir)        # fresh handle, same directory
+    out, stats = _search(store, os.path.join(tmpdir, "warm.json"))
+    fresh = store.stats.compiles
+    hits = stats.get("artifact_hits", 0)
+    ok = fresh == 0 and hits == stats.get("unique_configs", -1)
+    emit("artifacts/probe_warm_store", out.best_time * 1e6,
+         (f"fresh_compiles=0 store_hits={hits}/{stats.get('unique_configs')}"
+          if ok else
+          f"warm search recompiled: fresh={fresh} hits={hits} "
+          f"unique={stats.get('unique_configs')}"),
+         status="ok" if ok else "error", config=out.best_config,
+         evaluations=out.result.evaluations, engine=stats, compiles=fresh)
+
+    # -- 4-worker fleet sharing one store: at-most-once per artifact -------
+    fleet_dir = os.path.join(tmpdir, "fleet-store")
+
+    def fleet(cache_name: str):
+        dt = DistributedTuner(
+            PROBE, {"N": 8}, n_workers=N_WORKERS, mode="strided",
+            driver="thread", evaluator={"name": "costmodel"},
+            artifact_store=fleet_dir,
+            cache=TuningCache(os.path.join(tmpdir, cache_name)))
+        out = dt.run()
+        per_worker = [w.engine_stats for w in out.workers if w.engine_stats]
+        unique = sum(s.get("unique_configs", 0) for s in per_worker)
+        hits = sum(s.get("artifact_hits", 0) for s in per_worker)
+        return out, unique, hits
+
+    out, unique, hits = fleet("fleet-cold.json")
+    entries = len(ArtifactStore(fleet_dir))
+    # fleet-wide fresh compiles = prepares that were not store hits; the
+    # at-most-once gate: that count equals the number of distinct
+    # artifacts persisted (no artifact compiled twice across workers)
+    fleet_fresh = unique - hits
+    at_most_once = (out.ok and unique == N_ARTIFACTS
+                    and fleet_fresh == entries)
+    out_w, unique_w, hits_w = fleet("fleet-warm.json")
+    warm_free = out_w.ok and unique_w == hits_w == N_ARTIFACTS
+    ok = at_most_once and warm_free
+    emit("artifacts/dtune_shared_store_4w", out.best_time * 1e6,
+         (f"workers={N_WORKERS} distinct_artifacts={entries} "
+          f"cold_fresh={fleet_fresh} warm_fresh={unique_w - hits_w}"
+          if ok else
+          f"fleet store sharing broken: at_most_once={at_most_once} "
+          f"(unique={unique} fresh={fleet_fresh} entries={entries}) "
+          f"warm_free={warm_free} (unique={unique_w} hits={hits_w})"),
+         status="ok" if ok else "error", config=out.best_config,
+         evaluations=int(round(out.per_worker_evaluations)),
+         compiles=unique_w - hits_w)
+
+
+if __name__ == "__main__":
+    main()

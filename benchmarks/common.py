@@ -48,6 +48,10 @@ class Record:
     #: "measure": 1} — compare.py gates on growth here (new failures mean
     #: the benchmark silently measured fewer configs than the baseline)
     failures: Optional[Dict[str, int]] = None
+    #: fresh XLA compiles behind this row (artifact-store misses) —
+    #: compare.py gates on growth here: a warm search that recompiles
+    #: artifacts the store already holds has lost its compile savings
+    compiles: Optional[int] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = {"name": self.name, "us_per_call": round(self.us_per_call, 3),
@@ -61,6 +65,8 @@ class Record:
             d["engine"] = self.engine
         if self.failures is not None:
             d["failures"] = {k: int(v) for k, v in self.failures.items()}
+        if self.compiles is not None:
+            d["compiles"] = int(self.compiles)
         return d
 
 
@@ -86,11 +92,12 @@ def emit(name: str, us_per_call: float, derived: str = "", *,
          config: Optional[Dict[str, Any]] = None,
          evaluations: Optional[int] = None,
          engine: Optional[Dict[str, Any]] = None,
-         failures: Optional[Dict[str, int]] = None) -> Record:
+         failures: Optional[Dict[str, int]] = None,
+         compiles: Optional[int] = None) -> Record:
     """Benchmark output contract: CSV line + structured record."""
     rec = Record(name=name, us_per_call=float(us_per_call), derived=derived,
                  status=status, config=config, evaluations=evaluations,
-                 engine=engine, failures=failures)
+                 engine=engine, failures=failures, compiles=compiles)
     if _records is not None:
         _records.append(rec)
     suffix = derived if status == "ok" else f"ERROR:{derived}"

@@ -31,6 +31,14 @@ reach target than it used to has lost the very thing the warm start
 buys, and a sharded fleet whose per-worker count grew has lost its
 parallel speedup.  These counts come from seeded searches over the
 deterministic analytical model, so they are stable across hosts.
+
+Records may also carry a ``compiles`` count: fresh XLA compiles behind
+the row (artifact-store misses, emitted by the artifacts section).
+Growth beyond ``--compiles-threshold`` (relative, default 0.25) versus
+the baseline is a regression, and a baseline of **0** is exact: any
+fresh compile in a search the baseline shows to be compile-free means
+the persistent artifact store stopped deduplicating — the very property
+``repro.core.artifacts`` exists to provide.
 """
 
 from __future__ import annotations
@@ -111,6 +119,16 @@ def _evaluations_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
     return idx
 
 
+def _compiles_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
+    """(section, record) -> fresh-compile count, for records carrying one."""
+    idx = {}
+    for sname, sec in doc.get("sections", {}).items():
+        for rec in sec.get("records", []):
+            if isinstance(rec.get("compiles"), int):
+                idx[(sname, rec["name"])] = int(rec["compiles"])
+    return idx
+
+
 def _failure_index(doc: Dict[str, Any]
                    ) -> Dict[Tuple[str, str], Dict[str, int]]:
     """(section, record) -> per-kind failure counts behind that record.
@@ -133,7 +151,8 @@ def _failure_index(doc: Dict[str, Any]
 
 def compare(base: Dict[str, Any], cur: Dict[str, Any],
             threshold: float, min_us: float,
-            evals_threshold: float = 0.25) -> Tuple[int, List[str]]:
+            evals_threshold: float = 0.25,
+            compiles_threshold: float = 0.25) -> Tuple[int, List[str]]:
     """Return (exit_code, messages) for a baseline-vs-current diff."""
     messages: List[str] = []
     missing = [s for s in base.get("sections", {})
@@ -203,6 +222,28 @@ def compare(base: Dict[str, Any], cur: Dict[str, Any],
                 f"{key[0]}/{key[1]}: evaluations grew {n_base} -> {n_cur} "
                 f"(+{n_cur / n_base - 1.0:.0%} > +{evals_threshold:.0%}, "
                 f"search-efficiency loss)")
+
+    # compiles-per-search gate: fresh-compile growth means the artifact
+    # store stopped absorbing repeat lowerings.  A baseline of 0 is an
+    # exact contract — the warm/fleet rows prove searches can be
+    # compile-free, so any fresh compile there is a regression outright.
+    base_compiles = _compiles_index(base)
+    cur_compiles = _compiles_index(cur)
+    for key, n_cur in sorted(cur_compiles.items()):
+        if key not in base_compiles:
+            continue        # record new in current: nothing to compare
+        n_base = base_compiles[key]
+        if n_base == 0:
+            if n_cur > 0:
+                regressions.append(
+                    f"{key[0]}/{key[1]}: fresh compiles grew 0 -> {n_cur} "
+                    f"(baseline is compile-free; artifact store stopped "
+                    f"deduplicating)")
+        elif n_cur > n_base * (1.0 + compiles_threshold):
+            regressions.append(
+                f"{key[0]}/{key[1]}: fresh compiles grew {n_base} -> "
+                f"{n_cur} (+{n_cur / n_base - 1.0:.0%} > "
+                f"+{compiles_threshold:.0%}, compile-cache loss)")
     if regressions:
         return REGRESSION, ["REGRESSIONS:"] + regressions
     compared = sum(1 for k, v in base_idx.items()
@@ -224,6 +265,10 @@ def main(argv=None) -> int:
     ap.add_argument("--evals-threshold", type=float, default=0.25,
                     help="relative evaluation-count growth that counts as "
                          "a search-efficiency regression (default 0.25)")
+    ap.add_argument("--compiles-threshold", type=float, default=0.25,
+                    help="relative fresh-compile growth that counts as a "
+                         "compile-cache regression (default 0.25; a "
+                         "baseline of 0 gates exactly)")
     ap.add_argument("--schema-only", action="store_true",
                     help="validate structure + statuses only; never "
                          "report timing regressions")
@@ -251,7 +296,8 @@ def main(argv=None) -> int:
         return OK
 
     code, messages = compare(base, cur, args.threshold, args.min_us,
-                             evals_threshold=args.evals_threshold)
+                             evals_threshold=args.evals_threshold,
+                             compiles_threshold=args.compiles_threshold)
     if not args.quiet or code != OK:
         for m in messages:
             print(m, file=sys.stderr if code else sys.stdout)

@@ -15,7 +15,7 @@ Env knobs:
   REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
   REPRO_BENCH_ONLY   comma-separated subset
                      (conv,gemm,roofline,wallclock,engine,transfer,online,
-                      dtune)
+                      dtune,artifacts)
   REPRO_BENCH_OUT    output directory for BENCH_*.json
 """
 
@@ -68,8 +68,8 @@ def write_payload(name: str, payload: Dict[str, Any]) -> str:
 def main() -> None:
     only = os.environ.get("REPRO_BENCH_ONLY", "")
     wanted = set(only.split(",")) if only else None
-    from . import (bench_conv, bench_dtune, bench_engine, bench_gemm,
-                   bench_online, bench_roofline, bench_transfer,
+    from . import (bench_artifacts, bench_conv, bench_dtune, bench_engine,
+                   bench_gemm, bench_online, bench_roofline, bench_transfer,
                    bench_wallclock)
     table = {
         "conv": bench_conv.main,          # paper §V: Figs 4/5/6, Tables II/III
@@ -80,6 +80,7 @@ def main() -> None:
         "transfer": bench_transfer.main,  # nearest-shape reuse + warm start
         "online": bench_online.main,      # background retune + config hot-swap
         "dtune": bench_dtune.main,        # sharded workers + fleet cache merge
+        "artifacts": bench_artifacts.main,  # compile-artifact store hit rate
     }
     print("name,us_per_call,derived")
     sections: Dict[str, Dict[str, Any]] = {}

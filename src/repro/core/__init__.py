@@ -8,9 +8,13 @@ Public API surface (the CLTune analogue):
     from repro.core import make_strategy, TPU_V5E
 """
 
+from .artifacts import (ARTIFACT_FORMAT_VERSION, ArtifactStore,
+                        CompiledArtifact, StoreStats, default_store,
+                        resolve_store, spec_fingerprint)
 from .cache import (CacheEntry, TuningCache, default_cache, shape_distance,
                     split_key)
 from .engine import EngineConfig, EngineStats, EvaluationEngine
+from .envknobs import env_bool, env_int, env_str, parse_bool
 from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
                          Measurement, TPUAnalyticalEvaluator,
                          WallClockEvaluator, make_evaluator,
@@ -19,7 +23,8 @@ from .failures import (CompileError, EvaluationError, EvaluationTimeout,
                        FailureRecord, InfeasibleConfigError, MeasureError,
                        RetryPolicy, TransientError, VerificationFailure,
                        summarize_failures)
-from .hlo import CollectiveStats, collective_stats, count_ops, fusion_stats
+from .hlo import (CollectiveStats, canonicalize_hlo, collective_stats,
+                  count_ops, fingerprint, fusion_stats)
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
 from .registry import (REGISTRY, AutotunePolicy, KernelRegistry, Resolution,
@@ -36,16 +41,20 @@ from .tuner import Tuner, TuningOutcome
 from .verify import VerificationError, assert_trees_close, trees_close
 
 __all__ = [
+    "ARTIFACT_FORMAT_VERSION", "ArtifactStore", "CompiledArtifact",
+    "StoreStats", "default_store", "resolve_store", "spec_fingerprint",
     "CacheEntry", "TuningCache", "default_cache", "shape_distance",
     "split_key",
     "EngineConfig", "EngineStats", "EvaluationEngine",
+    "env_bool", "env_int", "env_str", "parse_bool",
     "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
     "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
     "median_prune_loop",
     "CompileError", "EvaluationError", "EvaluationTimeout", "FailureRecord",
     "InfeasibleConfigError", "MeasureError", "RetryPolicy", "TransientError",
     "VerificationFailure", "summarize_failures",
-    "CollectiveStats", "collective_stats", "count_ops", "fusion_stats",
+    "CollectiveStats", "canonicalize_hlo", "collective_stats", "count_ops",
+    "fingerprint", "fusion_stats",
     "PROFILES", "TPU_V3", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "DeviceProfile", "get_profile",
     "REGISTRY", "AutotunePolicy", "KernelRegistry", "Resolution",

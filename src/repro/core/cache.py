@@ -50,6 +50,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
+from .envknobs import env_str
+
 try:                                    # POSIX: real advisory file locks
     import fcntl
 except ImportError:                     # pragma: no cover - non-POSIX hosts
@@ -66,7 +68,7 @@ _ENV_VAR = "REPRO_TUNE_CACHE"
 
 
 def _default_path() -> str:
-    return os.environ.get(_ENV_VAR) or _DEFAULT_PATH
+    return env_str(_ENV_VAR, _DEFAULT_PATH)
 
 
 class _FileLock:

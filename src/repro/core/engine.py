@@ -18,11 +18,17 @@ through a thread-bridged fallback one config per ask — optionally with
 *speculative* neighbour prefetch, which warms the compile pool with the
 configurations the walk is most likely to ask next.
 
-Two further throughput levers:
+Three further throughput levers:
 
 * a per-run **memo** keyed on the canonical config key answers repeat
   configurations without recompiling or remeasuring (populations revisit
   their global best constantly);
+* the **persistent artifact store** (:mod:`repro.core.artifacts`): when
+  the evaluator has one attached, ``prepare`` answers from disk across
+  runs/processes; the engine tracks the provenance of every
+  :class:`~repro.core.artifacts.CompiledArtifact` it receives and
+  reports store hits as ``EngineStats.artifact_hits`` (with
+  ``compiles_avoided = memo_hits + artifact_hits`` derived);
 * **early-stop pruning** hands the measurement phase a threshold of
   ``prune_factor × incumbent``; once a candidate's running median exceeds
   it, the remaining repeats are aborted (the candidate already lost).
@@ -49,6 +55,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
+from .artifacts import CompiledArtifact
 from .evaluators import Evaluator, KernelSpec, Measurement
 from .failures import (CircuitBreakerTripped, CompileError, FailureRecord,
                        RetryPolicy, summarize_failures)
@@ -118,6 +125,8 @@ class EngineStats:
     unique_configs: int = 0         # distinct configs actually evaluated
     memo_hits: int = 0              # evaluations answered from the memo
     compile_calls: int = 0          # prepare() calls (incl. speculative)
+    artifact_hits: int = 0          # prepares answered by the persistent
+                                    # artifact store (provenance "store")
     speculative_compiles: int = 0
     speculative_hits: int = 0       # speculated artifacts later consumed
     pruned: int = 0                 # measurements aborted by early stop
@@ -146,8 +155,15 @@ class EngineStats:
         hidden = max(0.0, self.compile_total_s - self.compile_wait_s)
         return hidden / self.compile_total_s
 
+    @property
+    def compiles_avoided(self) -> int:
+        """Evaluations that skipped compilation entirely: answered by the
+        per-run memo or by the persistent artifact store."""
+        return self.memo_hits + self.artifact_hits
+
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
+        d["compiles_avoided"] = self.compiles_avoided
         d["compile_overlap_ratio"] = round(self.compile_overlap_ratio, 4)
         for k in ("compile_total_s", "compile_wait_s", "measure_total_s",
                   "wall_s"):
@@ -264,6 +280,9 @@ class EvaluationEngine:
                         # returning a failed Measurement instead of raising
                         raise CompileError(prepared.error
                                            or "prepare() reported failure")
+                    if (isinstance(prepared, CompiledArtifact)
+                            and prepared.from_store):
+                        self.stats.artifact_hits += 1
                     have_artifact = True
                 stage = "measure"
                 threshold = None

@@ -24,15 +24,18 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from . import verify
+from .artifacts import (PROVENANCE_NONE, ArtifactStore, CompiledArtifact,
+                        spec_fingerprint)
 from .failures import (CompileError, EvaluationError, InfeasibleConfigError,
                        MeasureError, VerificationFailure)
-from .hlo import collective_stats
+from .hlo import collective_stats, fingerprint
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config
 
@@ -107,18 +110,34 @@ def median_prune_loop(sample: Callable[[], float], repeats: int,
     return samples, False
 
 
-class Evaluator:
-    """Interface: evaluate(spec, config) -> Measurement.
+#: module-level flag: the evaluate() deprecation fires once per process,
+#: not once per call site (a tuning run calls it thousands of times)
+_EVALUATE_DEPRECATION_EMITTED = False
 
-    Evaluation optionally splits into two phases for the parallel engine:
+
+class Evaluator:
+    """Interface: ``prepare`` -> :class:`CompiledArtifact` -> ``measure``.
+
+    Evaluation splits into two typed phases for the parallel engine:
 
     * ``prepare(spec, config)`` — the compilation phase.  Must be safe to
-      run concurrently from a worker pool; returns an opaque artifact.
-      The default does nothing.
+      run concurrently from a worker pool and returns a
+      :class:`~repro.core.artifacts.CompiledArtifact` carrying the
+      content-address (HLO or spec fingerprint), the device-profile key,
+      lowered stats, the measurable payload and its provenance
+      (fresh-compile vs persistent-store hit).  The default prepares
+      nothing and returns a payload-free artifact with
+      ``provenance="none"``.
     * ``measure(spec, config, prepared, prune_threshold_s)`` — the timing
       phase, always serialized by the engine so measurements never
       contend.  ``prune_threshold_s`` enables early-stop pruning where
-      the backend supports it.
+      the backend supports it.  ``measure`` accepts the artifact from
+      *any* provenance; a store-hit artifact measures identically to a
+      fresh one (that is the whole point of the store).
+
+    Evaluators that can skip compilation consult ``artifact_store`` (an
+    :class:`~repro.core.artifacts.ArtifactStore`, attached by the Tuner
+    or set directly; None = no persistence) inside ``prepare``.
 
     **Failure contract**: a configuration that cannot be evaluated raises
     a typed :class:`~repro.core.failures.EvaluationError` subclass —
@@ -127,26 +146,53 @@ class Evaluator:
     :class:`~repro.core.failures.VerificationFailure`) from ``measure`` —
     carrying the original exception as ``__cause__``.  The evaluation
     engine converts these into ``inf``-time trials with structured
-    FailureRecords.  Returning a failed :class:`Measurement` from either
-    phase is the legacy convention and still tolerated.
+    FailureRecords.  Failed compiles are never persisted to the store.
+    Returning a failed :class:`Measurement` from either phase is the
+    legacy convention and still tolerated; so are legacy untyped
+    artifacts (``_CompiledKernel``, bare cost dicts) reaching
+    ``measure`` from code that calls ``prepare`` directly.
 
-    ``evaluate`` remains the one-call path and is definitionally
-    ``measure(spec, config, prepare(spec, config))`` with typed errors
-    folded back into failed Measurements (so bare objective adapters
-    keep seeing ``inf`` instead of exceptions).
+    ``evaluate`` — the positional one-call compat shim — is
+    **deprecated**: it emits a DeprecationWarning (once per process) and
+    routes through the artifact path.  Internal callers (``objective``,
+    ``analyze``, the engine) use the prepare/measure pair or the
+    non-warning ``_evaluate``.
     """
 
     name = "base"
+    #: persistent compile-artifact store; None disables persistence.
+    #: Class-level default so every evaluator has the attribute; the
+    #: Tuner attaches a per-run store on the instance.
+    artifact_store: Optional[ArtifactStore] = None
 
     def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
+        """Deprecated one-call path; use ``prepare`` + ``measure``
+        (or ``objective``) instead."""
+        global _EVALUATE_DEPRECATION_EMITTED
+        if not _EVALUATE_DEPRECATION_EMITTED:
+            _EVALUATE_DEPRECATION_EMITTED = True
+            warnings.warn(
+                "Evaluator.evaluate(spec, config) is deprecated; use the "
+                "typed prepare()/measure() artifact path (or objective()) "
+                "instead", DeprecationWarning, stacklevel=2)
+        return self._evaluate(spec, config)
+
+    def _evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
+        """measure(prepare(...)) with typed errors folded back into failed
+        Measurements — so bare objective adapters keep seeing ``inf``
+        instead of exceptions.  Not deprecated; not part of the public
+        contract."""
         try:
             return self.measure(spec, config, self.prepare(spec, config))
         except EvaluationError as e:
             return _failed(e)
 
-    def prepare(self, spec: KernelSpec, config: Config) -> Any:
+    def prepare(self, spec: KernelSpec, config: Config) -> CompiledArtifact:
         """Concurrent compile phase; default: nothing to prepare."""
-        return None
+        return CompiledArtifact(
+            kind=self.name,
+            fingerprint=spec_fingerprint(spec.name, spec.meta, config),
+            profile="", payload=None, provenance=PROVENANCE_NONE)
 
     def measure(self, spec: KernelSpec, config: Config,
                 prepared: Any = None,
@@ -156,7 +202,7 @@ class Evaluator:
     def objective(self, spec: KernelSpec) -> Callable[[Config], float]:
         """Adapt to the strategies' ``Config -> float`` objective."""
         def _obj(config: Config) -> float:
-            return self.evaluate(spec, config).time_s
+            return self._evaluate(spec, config).time_s
         return _obj
 
 
@@ -179,10 +225,14 @@ class WallClockEvaluator(Evaluator):
     """Median-of-N wall-clock timing of the jitted kernel (CLTune's method).
 
     ``prepare`` performs the expensive part — building and jit-compiling
-    the kernel plus the first (compiling) call — and is safe to run from
-    the engine's worker pool; ``measure`` verifies and times serially,
-    optionally aborting early once the running median exceeds the prune
-    threshold.
+    the kernel plus the first (compiling) call — and returns a
+    :class:`CompiledArtifact` whose payload is the live ``_CompiledKernel``
+    bundle (jitted fn, concrete args, first output).  A live executable
+    does not serialize, so the artifact is *not persistable*: wall-clock
+    artifacts never reach the on-disk store and their fingerprint is the
+    spec/config content address (no lowering happens separately from
+    jit).  ``measure`` verifies and times serially, optionally aborting
+    early once the running median exceeds the prune threshold.
     """
 
     name = "wallclock"
@@ -209,7 +259,13 @@ class WallClockEvaluator(Evaluator):
             compile_s = time.perf_counter() - t0
         except Exception as e:  # noqa: BLE001 — any build/compile error = failed config
             raise CompileError(f"{type(e).__name__}: {e}") from e
-        return _CompiledKernel(fn=fn, args=args, out=out, compile_s=compile_s)
+        kernel = _CompiledKernel(fn=fn, args=args, out=out, compile_s=compile_s)
+        return CompiledArtifact(
+            kind=self.name,
+            fingerprint=spec_fingerprint(spec.name, spec.meta, config,
+                                         extra=f"seed={self.seed}"),
+            profile="", payload=kernel, stats={"compile_s": compile_s},
+            compile_s=compile_s, persistable=False)
 
     def measure(self, spec: KernelSpec, config: Config,
                 prepared=None,
@@ -218,6 +274,8 @@ class WallClockEvaluator(Evaluator):
             prepared = self.prepare(spec, config)
         if isinstance(prepared, Measurement):   # prepare already failed
             return prepared
+        if isinstance(prepared, CompiledArtifact):
+            prepared = prepared.payload         # legacy _CompiledKernel passes as-is
         fn, args, out = prepared.fn, prepared.args, prepared.out
         compile_s = prepared.compile_s
 
@@ -263,6 +321,18 @@ class CostModelEvaluator(Evaluator):
     (ici_links * ici_bw), per chip.  ``chips`` divides flops/bytes when the
     candidate function is a *global* (multi-device) computation lowered on a
     mesh; for single-kernel tuning chips=1.
+
+    ``prepare`` lowers the kernel, content-addresses the lowered module
+    (:func:`repro.core.hlo.fingerprint`) and — when an ``artifact_store``
+    is attached — answers from the persistent store instead of compiling:
+    the expensive ``compile()`` + ``cost_analysis()`` half is skipped and
+    the returned :class:`CompiledArtifact` carries ``provenance="store"``
+    with ``compile_s=0``.  On a miss it compiles under the store's
+    per-artifact cross-process lock (fleet-wide at-most-once) and
+    persists the JSON cost payload keyed by (fingerprint,
+    ``profile.name``).  Failed compiles raise CompileError and are never
+    persisted.  ``measure`` prices the payload against the profile; a
+    store-hit payload prices identically to a fresh one.
     """
 
     name = "costmodel"
@@ -273,31 +343,52 @@ class CostModelEvaluator(Evaluator):
         self.chips = chips
         self.include_collectives = include_collectives
 
-    def prepare(self, spec: KernelSpec, config: Config):
-        """Lower + compile + extract costs (the parallelizable phase)."""
+    @property
+    def _artifact_kind(self) -> str:
+        # include_collectives changes the payload we extract, so the two
+        # variants must not share content addresses
+        return self.name if self.include_collectives else f"{self.name}-nocoll"
+
+    def prepare(self, spec: KernelSpec, config: Config) -> CompiledArtifact:
+        """Lower, fingerprint, then compile-or-fetch (the parallel phase)."""
         if spec.arg_specs is None:
             raise CompileError("CostModelEvaluator requires spec.arg_specs")
         try:
             t0 = time.perf_counter()
             fn = spec.build(config)
             lowered = jax.jit(fn).lower(*spec.arg_specs())
-            compiled = lowered.compile()
-            compile_s = time.perf_counter() - t0
-            cost = compiled.cost_analysis() or {}
-            if isinstance(cost, (list, tuple)):   # older jax: one dict/device
-                cost = cost[0] if cost else {}
+            fp = fingerprint(lowered)
         except Exception as e:  # noqa: BLE001
             raise CompileError(f"{type(e).__name__}: {e}") from e
-        coll = 0.0
-        if self.include_collectives:
+
+        def _compile() -> CompiledArtifact:
             try:
-                stats = collective_stats(compiled.as_text())
-                coll = stats.weighted_bytes
-            except Exception:   # text unavailable on some backends
-                coll = 0.0
-        return {"flops": float(cost.get("flops", 0.0)),
-                "bytes": float(cost.get("bytes accessed", 0.0)),
-                "collective_bytes": coll, "compile_s": compile_s}
+                compiled = lowered.compile()
+                cost = compiled.cost_analysis() or {}
+                if isinstance(cost, (list, tuple)):  # older jax: dict/device
+                    cost = cost[0] if cost else {}
+            except Exception as e:  # noqa: BLE001
+                raise CompileError(f"{type(e).__name__}: {e}") from e
+            coll = 0.0
+            if self.include_collectives:
+                try:
+                    coll = collective_stats(compiled.as_text()).weighted_bytes
+                except Exception:   # text unavailable on some backends
+                    coll = 0.0
+            compile_s = time.perf_counter() - t0
+            payload = {"flops": float(cost.get("flops", 0.0)),
+                       "bytes": float(cost.get("bytes accessed", 0.0)),
+                       "collective_bytes": float(coll),
+                       "compile_s": compile_s}
+            return CompiledArtifact(
+                kind=self._artifact_kind, fingerprint=fp,
+                profile=self.profile.name, payload=payload,
+                stats=dict(payload), compile_s=compile_s, persistable=True)
+
+        if self.artifact_store is not None:
+            return self.artifact_store.get_or_compute(
+                self._artifact_kind, fp, self.profile.name, _compile)
+        return _compile()
 
     def measure(self, spec: KernelSpec, config: Config,
                 prepared=None,
@@ -306,6 +397,11 @@ class CostModelEvaluator(Evaluator):
             prepared = self.prepare(spec, config)
         if isinstance(prepared, Measurement):
             return prepared
+        if isinstance(prepared, CompiledArtifact):
+            compile_s = prepared.compile_s
+            prepared = prepared.payload
+        else:   # legacy bare cost dict from direct prepare() callers
+            compile_s = float(prepared.get("compile_s", 0.0))
         flops, bytes_ = prepared["flops"], prepared["bytes"]
         coll = prepared["collective_bytes"]
         p = self.profile
@@ -314,14 +410,14 @@ class CostModelEvaluator(Evaluator):
         coll_t = coll / (self.chips * p.ici_links * p.ici_bw)
         t = max(compute_t, memory_t) + coll_t + p.launch_overhead
         return Measurement(
-            time_s=t, ok=True, compile_s=prepared["compile_s"],
+            time_s=t, ok=True, compile_s=compile_s,
             detail={"flops": flops, "bytes": bytes_,
                     "collective_bytes": coll,
                     "compute_t": compute_t, "memory_t": memory_t,
                     "collective_t": coll_t})
 
     def analyze(self, spec: KernelSpec, config: Config) -> Measurement:
-        return self.evaluate(spec, config)
+        return self._evaluate(spec, config)
 
 
 class TPUAnalyticalEvaluator(Evaluator):
@@ -333,6 +429,11 @@ class TPUAnalyticalEvaluator(Evaluator):
     is derived from the configuration, so repeated evaluation of the same
     point is deterministic — matching how a real timing distribution has a
     per-configuration systematic component plus jitter.
+
+    There is no compile phase: ``prepare`` is the base payload-free
+    :class:`CompiledArtifact` (``provenance="none"``), ``measure`` prices
+    the model directly and ignores the artifact.  Nothing reaches the
+    persistent store — there is nothing worth amortizing.
     """
 
     name = "analytical"

@@ -1,17 +1,26 @@
-"""HLO-text analysis: collective-communication byte accounting.
+"""HLO-text analysis: collective byte accounting + module fingerprinting.
 
 ``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
 collective traffic, so we parse the (stable)HLO/HLO text for the five
 collective ops and sum their result sizes.  Used by the roofline pipeline
 (launch/dryrun.py) and by the CostModelEvaluator that scores distributed
 configurations for the sharding auto-tuner.
+
+:func:`fingerprint` is the content-addressing half: it canonicalizes a
+lowered module's text (module names, location/metadata noise and
+whitespace stripped — everything that varies between two lowerings of the
+*same* computation) and hashes what remains.  The persistent
+compile-artifact store (:mod:`repro.core.artifacts`) keys on this
+fingerprint plus a device-profile key, so two processes lowering the same
+kernel configuration address the same artifact.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import re
-from typing import Dict, Iterable
+from typing import Any, Dict, Iterable
 
 # bytes per element for HLO dtypes
 _DTYPE_BYTES: Dict[str, int] = {
@@ -113,3 +122,65 @@ def fusion_stats(hlo_text: str) -> Dict[str, int]:
                    "copy", "dynamic-slice", "dynamic-update-slice", "while",
                    "custom-call"]
     return count_ops(hlo_text, interesting)
+
+
+# -- module fingerprinting ----------------------------------------------------
+#
+# Two lowerings of the same computation differ only in presentation noise:
+# the module name carries the jitted function's name (``module @jit_build``
+# vs ``HloModule jit_build.42``), instructions carry ``metadata={...}``
+# source attribution, MLIR text carries ``loc(...)`` locations, and
+# whitespace/indentation is formatter-dependent.  The canonicalizer strips
+# exactly that — and nothing structural — so the fingerprint is stable
+# across processes and hosts while distinct computations keep distinct
+# digests.
+
+# HLO header: ``HloModule jit_fn.123, entry_computation_layout=...``
+_HLO_MODULE_RE = re.compile(r"^HloModule\s+[^,\s]+", re.MULTILINE)
+# MLIR header: ``module @jit_fn attributes {...}``
+_MLIR_MODULE_RE = re.compile(r"\bmodule\s+@[\w.$-]+")
+# per-instruction source attribution: ``metadata={op_name="..." ...}``
+_METADATA_RE = re.compile(r",?\s*metadata=\{[^{}]*\}")
+# MLIR location info: ``loc("...")`` / ``loc(#loc123)`` (non-nested forms;
+# nested fused locs are rare in ``as_text()`` output without debug info)
+_LOC_RE = re.compile(r"\s*loc\([^()]*(?:\([^()]*\)[^()]*)*\)")
+# ``#loc123 = loc(...)`` trailer lines
+_LOC_LINE_RE = re.compile(r"^#loc\d*\s*=.*$", re.MULTILINE)
+
+
+def canonicalize_hlo(text: str) -> str:
+    """Normalize lowered-module text for content addressing.
+
+    Strips module names, ``metadata={...}`` attribution, MLIR ``loc(...)``
+    markers and redundant whitespace from HLO or StableHLO-MLIR text.  The
+    result is NOT valid module text — it exists solely to be hashed.
+    """
+    text = _HLO_MODULE_RE.sub("HloModule m", text)
+    text = _MLIR_MODULE_RE.sub("module @m", text)
+    text = _METADATA_RE.sub("", text)
+    text = _LOC_LINE_RE.sub("", text)
+    text = _LOC_RE.sub("", text)
+    # collapse all whitespace runs: indentation and line breaks are
+    # presentation, not structure (HLO text is line-oriented but every
+    # instruction line is already self-delimiting)
+    return " ".join(text.split())
+
+
+def fingerprint(module: Any) -> str:
+    """Content-address a lowered module: ``hlo:<sha256-prefix>``.
+
+    Accepts module text (``str``) or anything with ``as_text()`` — a
+    ``jax.stages.Lowered``, a compiled executable, or a wrapped module.
+    The digest is taken over :func:`canonicalize_hlo` of the text, so
+    lowering the same computation in another process (different jit
+    wrapper names, different source locations) yields the same address.
+    """
+    if not isinstance(module, str):
+        as_text = getattr(module, "as_text", None)
+        if as_text is None:
+            raise TypeError(
+                "fingerprint() takes module text or an object with "
+                f"as_text(); got {type(module).__name__}")
+        module = as_text()
+    digest = hashlib.sha256(canonicalize_hlo(module).encode()).hexdigest()
+    return f"hlo:{digest[:32]}"

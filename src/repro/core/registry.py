@@ -38,13 +38,13 @@ from __future__ import annotations
 import dataclasses
 import enum
 import logging
-import os
 from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
                     Sequence, Tuple)
 
 import numpy as np
 
 from .cache import CacheEntry, TuningCache, default_cache
+from .envknobs import env_str
 from .failures import EvaluationError
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config, SearchSpace
@@ -89,7 +89,7 @@ class AutotunePolicy(enum.Enum):
 
 def default_policy() -> AutotunePolicy:
     """Process-wide default policy, overridable via ``REPRO_AUTOTUNE``."""
-    return AutotunePolicy.coerce(os.environ.get("REPRO_AUTOTUNE", "off"))
+    return AutotunePolicy.coerce(env_str("REPRO_AUTOTUNE", "off"))
 
 
 def _escape_dim(field: str) -> str:

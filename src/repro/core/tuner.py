@@ -37,6 +37,7 @@ import dataclasses
 import logging
 from typing import Any, Callable, Dict, Optional, Sequence
 
+from .artifacts import ArtifactStore, resolve_store
 from .cache import TuningCache, default_cache
 from .engine import EngineConfig, EvaluationEngine
 from .evaluators import (Evaluator, KernelSpec, Measurement,
@@ -116,6 +117,7 @@ class TuningOutcome:
                 f"engine: {s.get('compile_calls', 0)} compiles for "
                 f"{s.get('evaluations', 0)} evaluations "
                 f"({s.get('memo_hits', 0)} memo hits, "
+                f"{s.get('artifact_hits', 0)} store hits, "
                 f"{s.get('pruned', 0)} pruned, "
                 f"{s.get('compile_failures', 0)}+"
                 f"{s.get('measure_failures', 0)} compile+measure failures, "
@@ -128,7 +130,8 @@ class Tuner:
 
     def __init__(self, evaluator: Optional[Evaluator] = None,
                  profile: DeviceProfile = TPU_V5E,
-                 cache: Optional[TuningCache] = None):
+                 cache: Optional[TuningCache] = None,
+                 artifact_store: "ArtifactStore | str | None" = None):
         self.evaluator = evaluator or WallClockEvaluator()
         self.profile = profile
         self.space = SearchSpace()
@@ -137,6 +140,13 @@ class Tuner:
         self._reference: Optional[Callable] = None
         self._vmem_footprint: Optional[Callable[[Config], int]] = None
         self._vmem_constraint_added = False
+        # attach the persistent compile-artifact store (an instance, a root
+        # directory, or None = the REPRO_ARTIFACT_CACHE-gated process
+        # default) — without clobbering a store the evaluator already has
+        store = resolve_store(artifact_store)
+        if store is not None and self.evaluator.artifact_store is None:
+            self.evaluator.artifact_store = store
+        self.artifact_store = self.evaluator.artifact_store
 
     # -- declarative construction ---------------------------------------------
     @classmethod
@@ -144,6 +154,7 @@ class Tuner:
                      evaluator: Optional[Evaluator] = None,
                      profile: DeviceProfile = TPU_V5E,
                      cache: Optional[TuningCache] = None,
+                     artifact_store: "ArtifactStore | str | None" = None,
                      interpret: bool = True,
                      extended_space: bool = False) -> "Tuner":
         """Build a ready-to-run Tuner from a :class:`TunableKernel` spec.
@@ -161,7 +172,8 @@ class Tuner:
             evaluator = (TPUAnalyticalEvaluator(profile=profile)
                          if k.analytical_model is not None
                          else WallClockEvaluator())
-        tuner = cls(evaluator=evaluator, profile=profile, cache=cache)
+        tuner = cls(evaluator=evaluator, profile=profile, cache=cache,
+                    artifact_store=artifact_store)
         tuner.space = k.make_space(shape, extended=extended_space)
         if k.reference is not None:
             tuner.set_reference(k.reference(shape))

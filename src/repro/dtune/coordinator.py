@@ -14,11 +14,15 @@
    :class:`~repro.serve.online.ConfigSlot` holders hot-swap without any
    coordinator → serve plumbing.
 
-Env knobs (all overridable per-call):
+Env knobs (all overridable per-call, parsed by
+:mod:`repro.core.envknobs`):
 
 * ``REPRO_DTUNE_WORKERS`` — fleet size (default 4)
 * ``REPRO_DTUNE_MODE`` — ``strided`` | ``islands`` (default ``strided``)
 * ``REPRO_DTUNE_DRIVER`` — ``thread`` | ``process`` (default ``thread``)
+* ``REPRO_ARTIFACT_CACHE`` / ``REPRO_ARTIFACT_DIR`` — enable/locate the
+  shared compile-artifact store every worker opens (at-most-once
+  compiles fleet-wide); an explicit ``artifact_store`` argument wins
 """
 
 from __future__ import annotations
@@ -33,8 +37,10 @@ import tempfile
 import threading
 from typing import Any, Dict, List, Mapping, Optional
 
+from ..core.artifacts import ArtifactStore, resolve_store
 from ..core.cache import CacheEntry, TuningCache, default_cache
 from ..core.engine import EngineConfig
+from ..core.envknobs import env_int, env_str
 from ..core.profiles import DeviceProfile, TPU_V5E
 from ..core.registry import Shape, resolve
 from .partition import Shard, shard_space
@@ -47,17 +53,6 @@ ENV_MODE = "REPRO_DTUNE_MODE"
 ENV_DRIVER = "REPRO_DTUNE_DRIVER"
 
 _DEFAULT_WORKERS = 4
-
-
-def _env_int(var: str, fallback: int) -> int:
-    raw = os.environ.get(var)
-    if not raw:
-        return fallback
-    try:
-        return int(raw)
-    except ValueError:
-        log.warning("dtune: ignoring non-integer %s=%r", var, raw)
-        return fallback
 
 
 @dataclasses.dataclass
@@ -130,6 +125,7 @@ class DistributedTuner:
                  profile: DeviceProfile = TPU_V5E,
                  evaluator: EvaluatorSpec = None,
                  cache: Optional[TuningCache] = None,
+                 artifact_store: "ArtifactStore | str | None" = None,
                  budget: Optional[int] = None,
                  engine: "EngineConfig | Mapping[str, Any] | None" = None,
                  interpret: bool = True,
@@ -140,12 +136,17 @@ class DistributedTuner:
         self.kernel = resolve(kernel)
         self.shape = dict(shape)
         self.n_workers = (n_workers if n_workers is not None
-                          else _env_int(ENV_WORKERS, _DEFAULT_WORKERS))
-        self.mode = mode or os.environ.get(ENV_MODE) or "strided"
-        self.driver = driver or os.environ.get(ENV_DRIVER) or "thread"
+                          else env_int(ENV_WORKERS, _DEFAULT_WORKERS))
+        self.mode = mode or env_str(ENV_MODE, "strided")
+        self.driver = driver or env_str(ENV_DRIVER, "thread")
         self.profile = profile
         self.evaluator = evaluator
         self.cache = cache if cache is not None else default_cache()
+        # workers only get the store's *directory* (a live store does not
+        # pickle); each opens its own ArtifactStore on it and the per-
+        # artifact file locks give at-most-once compiles across the fleet
+        store = resolve_store(artifact_store)
+        self.artifact_dir = store.root if store is not None else None
         self.budget = budget
         if isinstance(engine, EngineConfig):
             engine = {f.name: getattr(engine, f.name)
@@ -197,14 +198,18 @@ class DistributedTuner:
         self._stop = (mp.get_context().Event() if self.driver == "process"
                       else threading.Event())
         workdir = tempfile.mkdtemp(prefix="repro-dtune-")
-        specs = [WorkerSpec(
-            kernel=k.name, shape=dict(self.shape), shard=shard,
-            profile=self.profile.name, evaluator=self.evaluator,
-            engine=dict(self.engine), interpret=self.interpret,
-            extended_space=self.extended_space,
-            cache_path=os.path.join(workdir, f"worker{shard.index}.json"),
-            seeds=seeds) for shard in shards]
+        # everything between mkdtemp and the finally lives inside the try:
+        # a crash anywhere here (spec construction, a driver raising, a
+        # terminated worker fleet) used to leak the private-cache tempdir
         try:
+            specs = [WorkerSpec(
+                kernel=k.name, shape=dict(self.shape), shard=shard,
+                profile=self.profile.name, evaluator=self.evaluator,
+                engine=dict(self.engine), interpret=self.interpret,
+                extended_space=self.extended_space,
+                cache_path=os.path.join(workdir, f"worker{shard.index}.json"),
+                seeds=seeds,
+                artifact_dir=self.artifact_dir) for shard in shards]
             results = run_workers(specs, self.driver,
                                   stop_event=self._stop,
                                   timeout_s=timeout_s)

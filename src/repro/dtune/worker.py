@@ -87,6 +87,11 @@ class WorkerSpec:
     cache_path: Optional[str] = None
     #: warm-start seed configs (nearest-shape winners, heuristics)
     seeds: Optional[List[Dict[str, Any]]] = None
+    #: root directory of the *shared* compile-artifact store (picklable
+    #: path, not a live store): every worker opens its own ArtifactStore
+    #: on it, and the store's per-artifact cross-process locks make each
+    #: distinct artifact compile at most once fleet-wide.  None = no store.
+    artifact_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -142,7 +147,8 @@ class TuningWorker:
             k, spec.shape,
             evaluator=resolve_evaluator(spec.evaluator),
             profile=get_profile(spec.profile),
-            cache=cache, interpret=spec.interpret,
+            cache=cache, artifact_store=spec.artifact_dir,
+            interpret=spec.interpret,
             extended_space=spec.extended_space)
         engine = dict(spec.engine)
         if self.stop_event is not None:

@@ -26,6 +26,7 @@ import numpy as np
 
 from .. import kernels  # noqa: F401 — populates the tunable registry
 from ..core.cache import CacheEntry, TuningCache, default_cache, split_key
+from ..core.envknobs import env_bool
 from ..core.profiles import DeviceProfile, TPU_V5E
 from ..core.registry import (AutotunePolicy, REGISTRY, Resolution,
                              lookup_resolved)
@@ -42,8 +43,9 @@ _ONLINE_ENV_VAR = "REPRO_ONLINE_TUNE"
 
 
 def _online_tune_from_env() -> bool:
-    return os.environ.get(_ONLINE_ENV_VAR, "").strip().lower() in (
-        "1", "true", "on", "yes")
+    # strict parse (envknobs): REPRO_ONLINE_TUNE=2 / =enable raises instead
+    # of silently landing on either side of the feature flag
+    return env_bool(_ONLINE_ENV_VAR, False)
 
 
 def resolve_kernel_resolutions(cfg: ModelConfig, slots: int, max_len: int, *,

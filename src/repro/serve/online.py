@@ -142,6 +142,12 @@ class OnlineTuneConfig:
     engine: Optional[Any] = None
     #: warm-start neighbour pool handed to tune_kernel (cache.nearest)
     warm_start: "bool | int" = True
+    #: persistent compile-artifact store shared with the rest of the fleet
+    #: (ArtifactStore instance, root directory path, or None = the
+    #: REPRO_ARTIFACT_CACHE-gated process default).  With a warm store a
+    #: retune skips every compile a dtune worker or earlier retune already
+    #: paid for, dropping retune-to-swap latency to measure-only.
+    artifact_store: Optional[Any] = None
     interpret: bool = True
     seed: int = 0
     #: refuse new jobs beyond this many queued-but-unstarted ones
@@ -273,7 +279,7 @@ class BackgroundTuner:
         kwargs: Dict[str, Any] = dict(
             strategy=cfg.strategy, budget=cfg.budget, seed=cfg.seed,
             interpret=cfg.interpret, engine=cfg.engine,
-            warm_start=cfg.warm_start)
+            warm_start=cfg.warm_start, artifact_store=cfg.artifact_store)
         if cfg.evaluator_factory is not None:
             kwargs["evaluator"] = cfg.evaluator_factory(k, job.shape, profile)
         try:

@@ -23,6 +23,7 @@ import dataclasses
 import logging
 from typing import Any, Dict, List, Optional, Sequence
 
+from ..core.artifacts import ArtifactStore
 from ..core.cache import TuningCache, default_cache
 from ..core.engine import EngineConfig
 from ..core.evaluators import Evaluator
@@ -59,6 +60,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 evaluator: Optional[Evaluator] = None,
                 profile: DeviceProfile = TPU_V5E,
                 cache: Optional[TuningCache] = None,
+                artifact_store: "ArtifactStore | str | None" = None,
                 record: bool = True,
                 seed: int = 0,
                 interpret: bool = True,
@@ -84,6 +86,13 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     in the cache plus the declared heuristic (int = how many neighbours;
     True = 3; False/0 = search cold; default on).  Explicit ``seeds``
     configs are evaluated before any warm-start candidates.
+
+    ``artifact_store`` attaches the persistent compile-artifact cache
+    (:mod:`repro.core.artifacts`): an :class:`ArtifactStore`, a root
+    directory path, or None = the ``REPRO_ARTIFACT_CACHE``-gated process
+    default.  A second identical search against a warm store performs no
+    fresh compiles — every prepare is a store hit
+    (``engine_stats["artifact_hits"]``).
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -102,7 +111,8 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
         all_seeds += warm_start_seeds(k, shape, profile=profile, cache=cache,
                                       k_nearest=k_nearest)
     tuner = Tuner.from_tunable(k, shape, evaluator=evaluator, profile=profile,
-                               cache=cache, interpret=interpret,
+                               cache=cache, artifact_store=artifact_store,
+                               interpret=interpret,
                                extended_space=extended_space)
     return tuner.tune(strategy=strategy, budget=budget, seed=seed,
                       record_to_cache=record, shape_key=k.key_for(shape),
@@ -117,6 +127,8 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
                             profile: DeviceProfile = TPU_V5E,
                             evaluator: Any = None,
                             cache: Optional[TuningCache] = None,
+                            artifact_store: "ArtifactStore | str | None"
+                            = None,
                             budget: Optional[int] = None,
                             engine: "EngineConfig | Dict[str, Any] | None"
                             = None,
@@ -144,7 +156,8 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
     from ..dtune import DistributedTuner      # lazy: dtune sits above us
     tuner = DistributedTuner(
         kernel, shape, n_workers=n_workers, mode=mode, driver=driver,
-        profile=profile, evaluator=evaluator, cache=cache, budget=budget,
+        profile=profile, evaluator=evaluator, cache=cache,
+        artifact_store=artifact_store, budget=budget,
         engine=engine, interpret=interpret, extended_space=extended_space,
         warm_start=warm_start, seed=seed, record=record)
     return tuner.run(timeout_s=timeout_s)
@@ -172,6 +185,7 @@ class TuningSession:
 
     def __init__(self, profile: DeviceProfile = TPU_V5E, *,
                  cache: Optional[TuningCache] = None,
+                 artifact_store: "ArtifactStore | str | None" = None,
                  strategy: Optional[str] = None,
                  budget: Optional[int] = None,
                  seed: int = 0,
@@ -182,6 +196,9 @@ class TuningSession:
                  engine: "EngineConfig | Dict[str, Any] | None" = None):
         self.profile = profile
         self.cache = cache if cache is not None else default_cache()
+        #: shared compile-artifact store for every queued item (None = the
+        #: env-gated default; resolved per item inside tune_kernel)
+        self.artifact_store = artifact_store
         self.strategy = strategy
         self.budget = budget
         self.seed = seed
@@ -237,6 +254,7 @@ class TuningSession:
             kw.update(item.overrides)
             if "evaluator" not in kw and self.evaluator_factory is not None:
                 kw["evaluator"] = self.evaluator_factory(k, shape, self.profile)
+            kw.setdefault("artifact_store", self.artifact_store)
             outcome = tune_kernel(k, shape, profile=self.profile,
                                   cache=self.cache, record=False, **kw)
             self.outcomes[item.key] = outcome
@@ -282,7 +300,7 @@ class TuningSession:
     def engine_stats(self) -> Dict[str, int]:
         """Aggregate engine counters across every tuned item."""
         totals = {"evaluations": 0, "unique_configs": 0, "memo_hits": 0,
-                  "compile_calls": 0, "pruned": 0,
+                  "artifact_hits": 0, "compile_calls": 0, "pruned": 0,
                   "compile_failures": 0, "measure_failures": 0, "retries": 0}
         for outcome in self.outcomes.values():
             s = outcome.engine_stats or {}

@@ -215,3 +215,62 @@ def test_emitted_records_roundtrip_fields():
     assert j["config"] == {"BM": 128, "dtype": "f32"}
     assert j["evaluations"] == 42
     assert j["engine"]["compile_calls"] == 7
+
+
+# -- compiles-per-search gate (artifact-store compile savings) ---------------
+
+def crec(name, us, compiles):
+    r = rec(name, us)
+    r["compiles"] = compiles
+    return r
+
+
+def test_compile_growth_is_a_regression(tmp_path):
+    base = doc(artifacts=section([crec("cold", 1000.0, 8)]))
+    cur = doc(artifacts=section([crec("cold", 1000.0, 11)]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+
+
+def test_compile_growth_within_threshold_passes(tmp_path):
+    base = doc(artifacts=section([crec("cold", 1000.0, 8)]))
+    cur = doc(artifacts=section([crec("cold", 1000.0, 9)]))
+    assert run_main(tmp_path, base, cur) == compare.OK
+
+
+def test_zero_compile_baseline_gates_exactly(tmp_path, capsys):
+    # the warm-store row's whole point: the baseline proves the search
+    # can be compile-free, so even ONE fresh compile is a regression
+    base = doc(artifacts=section([crec("warm", 1000.0, 0)]))
+    cur = doc(artifacts=section([crec("warm", 1000.0, 1)]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+    assert "compile-free" in capsys.readouterr().err
+
+
+def test_compiles_threshold_configurable(tmp_path):
+    base = doc(artifacts=section([crec("cold", 1000.0, 8)]))
+    cur = doc(artifacts=section([crec("cold", 1000.0, 12)]))
+    assert run_main(tmp_path, base, cur,
+                    "--compiles-threshold", "0.6") == compare.OK
+    assert run_main(tmp_path, base, cur,
+                    "--compiles-threshold", "0.25") == compare.REGRESSION
+
+
+def test_fewer_compiles_pass(tmp_path):
+    base = doc(artifacts=section([crec("cold", 1000.0, 8)]))
+    cur = doc(artifacts=section([crec("cold", 1000.0, 0)]))
+    assert run_main(tmp_path, base, cur) == compare.OK
+
+
+def test_compiles_on_record_new_in_current_ignored(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0),
+                            crec("new", 10.0, 99)]))
+    assert run_main(tmp_path, BASE, cur) == compare.OK
+
+
+def test_emit_compiles_lands_in_record_json():
+    common.begin_section()
+    common.emit("warm", 2.0, "hits=8/8", compiles=0)
+    common.emit("plain", 2.0)
+    warm, plain = common.end_section()
+    assert warm.to_json()["compiles"] == 0
+    assert "compiles" not in plain.to_json()

@@ -521,3 +521,112 @@ def test_failures_field_roundtrip_and_legacy_stability(tmp_path):
     again = TuningCache(cache.path).load()
     assert again.get("k", "s", "p").failures == 2
     assert again.get("k", "s2", "p").failures == 0
+
+
+# -- coordinator workdir containment + shared artifact store ------------------
+
+def _dtune_tmpdirs():
+    import tempfile as _tempfile
+    base = _tempfile.gettempdir()
+    return {d for d in os.listdir(base) if d.startswith("repro-dtune-")}
+
+
+def test_workdir_cleaned_up_on_coordinator_crash(tmp_path, monkeypatch):
+    """A crash anywhere between mkdtemp and the merge (driver raising,
+    worker fleet terminated) must not leak the private-cache tempdir."""
+    from repro.dtune import coordinator as mod
+
+    def explode(*a, **kw):
+        raise RuntimeError("fleet terminated")
+
+    monkeypatch.setattr(mod, "run_workers", explode)
+    before = _dtune_tmpdirs()
+    dt = DistributedTuner("gemm", SHAPE, n_workers=2, driver="thread",
+                          cache=TuningCache(str(tmp_path / "c.json")))
+    with pytest.raises(RuntimeError, match="fleet terminated"):
+        dt.run()
+    assert _dtune_tmpdirs() == before                # nothing leaked
+
+
+def test_workdir_cleaned_up_on_spec_construction_crash(tmp_path, monkeypatch):
+    from repro.dtune import coordinator as mod
+
+    def bad_spec(*a, **kw):
+        raise TypeError("unpicklable spec")
+
+    monkeypatch.setattr(mod, "WorkerSpec", bad_spec)
+    before = _dtune_tmpdirs()
+    dt = DistributedTuner("gemm", SHAPE, n_workers=2, driver="thread",
+                          cache=TuningCache(str(tmp_path / "c.json")))
+    with pytest.raises(TypeError, match="unpicklable"):
+        dt.run()
+    assert _dtune_tmpdirs() == before
+
+
+def test_workdir_cleaned_up_on_normal_run(tmp_path):
+    before = _dtune_tmpdirs()
+    DistributedTuner("gemm", SHAPE, n_workers=2, driver="thread",
+                     budget=4, mode="islands",
+                     cache=TuningCache(str(tmp_path / "c.json"))).run()
+    assert _dtune_tmpdirs() == before
+
+
+def test_worker_spec_ships_artifact_dir(tmp_path):
+    """artifact_dir is plain picklable data; the worker opens its own
+    store on it and records compiled artifacts there."""
+    import pickle
+
+    from repro.core.artifacts import ArtifactStore
+
+    shard = Shard(index=0, total=1, mode="strided", strategy="full",
+                  strategy_kwargs={"offset": 0, "stride": 1})
+    spec = _spec(tmp_path, shard, artifact_dir=str(tmp_path / "store"))
+    assert pickle.loads(pickle.dumps(spec)).artifact_dir == spec.artifact_dir
+    res = TuningWorker(spec).run()
+    assert res.status == "ok"
+    # the analytical evaluator has no compile phase: nothing persisted,
+    # nothing crashed — the plumbing is exercised end to end
+    assert len(ArtifactStore(str(tmp_path / "store"))) == 0
+
+
+def test_distributed_reruns_share_artifact_store(tmp_path):
+    """Second fleet run against the warm shared store: every prepare in
+    every worker is a store hit — zero fresh compiles fleet-wide."""
+    from repro.core import SearchSpace as SS
+    from repro.core.artifacts import ArtifactStore
+    from repro.core.registry import tunable
+
+    import jax
+    import jax.numpy as jnp
+
+    def space(shape):
+        sp = SS()
+        sp.add_parameter(name="k", values=(1.0, 2.0, 3.0, 4.0))
+        return sp
+
+    @tunable(name="dtune-artifact-probe", space=space,
+             heuristic=lambda s: {"k": 1.0},
+             arg_specs=lambda s: (jax.ShapeDtypeStruct((8, 8), jnp.float32),))
+    def probe(shape, config, interpret=True):
+        return lambda x: x * float(config["k"])
+
+    store_dir = str(tmp_path / "store")
+
+    def fleet():
+        dt = DistributedTuner(
+            "dtune-artifact-probe", {"N": 8}, n_workers=2, mode="strided",
+            driver="thread", evaluator={"name": "costmodel"},
+            artifact_store=store_dir,
+            cache=TuningCache(str(tmp_path / "c.json")))
+        out = dt.run()
+        stats = [w.engine_stats for w in out.workers if w.engine_stats]
+        return (sum(s["unique_configs"] for s in stats),
+                sum(s["artifact_hits"] for s in stats))
+
+    unique_cold, hits_cold = fleet()
+    assert unique_cold == 4
+    # each distinct artifact was compiled at most once fleet-wide
+    store = ArtifactStore(store_dir)
+    assert len(store) == 4 - hits_cold
+    unique_warm, hits_warm = fleet()
+    assert (unique_warm, hits_warm) == (4, 4)        # zero fresh compiles
