@@ -52,6 +52,11 @@ class Record:
     #: compare.py gates on growth here: a warm search that recompiles
     #: artifacts the store already holds has lost its compile savings
     compiles: Optional[int] = None
+    #: p99 step latency behind this row (tail-latency benchmarks) —
+    #: compare.py gates on growth beyond --p99-threshold: an SLO
+    #: benchmark whose tail got slower has lost the very thing
+    #: shape-bucketed serving buys
+    p99_us: Optional[float] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = {"name": self.name, "us_per_call": round(self.us_per_call, 3),
@@ -67,6 +72,8 @@ class Record:
             d["failures"] = {k: int(v) for k, v in self.failures.items()}
         if self.compiles is not None:
             d["compiles"] = int(self.compiles)
+        if self.p99_us is not None:
+            d["p99_us"] = round(float(self.p99_us), 3)
         return d
 
 
@@ -93,11 +100,13 @@ def emit(name: str, us_per_call: float, derived: str = "", *,
          evaluations: Optional[int] = None,
          engine: Optional[Dict[str, Any]] = None,
          failures: Optional[Dict[str, int]] = None,
-         compiles: Optional[int] = None) -> Record:
+         compiles: Optional[int] = None,
+         p99_us: Optional[float] = None) -> Record:
     """Benchmark output contract: CSV line + structured record."""
     rec = Record(name=name, us_per_call=float(us_per_call), derived=derived,
                  status=status, config=config, evaluations=evaluations,
-                 engine=engine, failures=failures, compiles=compiles)
+                 engine=engine, failures=failures, compiles=compiles,
+                 p99_us=p99_us)
     if _records is not None:
         _records.append(rec)
     suffix = derived if status == "ok" else f"ERROR:{derived}"

@@ -39,6 +39,13 @@ the baseline is a regression, and a baseline of **0** is exact: any
 fresh compile in a search the baseline shows to be compile-free means
 the persistent artifact store stopped deduplicating — the very property
 ``repro.core.artifacts`` exists to provide.
+
+Records may also carry a ``p99_us`` tail-latency figure (the slo
+section's per-step p99).  Growth beyond ``--p99-threshold`` (relative,
+default 0.5 — wall-clock, so as noisy as ``us_per_call``) versus the
+baseline is a regression: a mean that held steady while the p99 blew
+out is exactly the failure mode SLO-objective tuning exists to catch,
+so the tail gets its own gate instead of hiding inside the mean.
 """
 
 from __future__ import annotations
@@ -129,6 +136,17 @@ def _compiles_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], int]:
     return idx
 
 
+def _p99_index(doc: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
+    """(section, record) -> p99 step latency, for records carrying one."""
+    idx = {}
+    for sname, sec in doc.get("sections", {}).items():
+        for rec in sec.get("records", []):
+            if isinstance(rec.get("p99_us"), (int, float)) \
+                    and rec["p99_us"] > 0:
+                idx[(sname, rec["name"])] = float(rec["p99_us"])
+    return idx
+
+
 def _failure_index(doc: Dict[str, Any]
                    ) -> Dict[Tuple[str, str], Dict[str, int]]:
     """(section, record) -> per-kind failure counts behind that record.
@@ -152,7 +170,8 @@ def _failure_index(doc: Dict[str, Any]
 def compare(base: Dict[str, Any], cur: Dict[str, Any],
             threshold: float, min_us: float,
             evals_threshold: float = 0.25,
-            compiles_threshold: float = 0.25) -> Tuple[int, List[str]]:
+            compiles_threshold: float = 0.25,
+            p99_threshold: float = 0.5) -> Tuple[int, List[str]]:
     """Return (exit_code, messages) for a baseline-vs-current diff."""
     messages: List[str] = []
     missing = [s for s in base.get("sections", {})
@@ -244,6 +263,22 @@ def compare(base: Dict[str, Any], cur: Dict[str, Any],
                 f"{key[0]}/{key[1]}: fresh compiles grew {n_base} -> "
                 f"{n_cur} (+{n_cur / n_base - 1.0:.0%} > "
                 f"+{compiles_threshold:.0%}, compile-cache loss)")
+
+    # tail-latency gate: p99 step-latency growth is a regression in its
+    # own right — SLO serving optimizes the tail, so a blown-out p99
+    # must not be able to hide behind a steady mean/median
+    base_p99 = _p99_index(base)
+    cur_p99 = _p99_index(cur)
+    for key, p_cur in sorted(cur_p99.items()):
+        if key not in base_p99:
+            continue        # record new in current: nothing to compare
+        p_base = base_p99[key]
+        rel = p_cur / p_base - 1.0
+        if rel > p99_threshold:
+            regressions.append(
+                f"{key[0]}/{key[1]}: p99 step latency grew "
+                f"{p_base:.1f}us -> {p_cur:.1f}us (+{rel:.0%} > "
+                f"+{p99_threshold:.0%}, tail-latency loss)")
     if regressions:
         return REGRESSION, ["REGRESSIONS:"] + regressions
     compared = sum(1 for k, v in base_idx.items()
@@ -269,6 +304,9 @@ def main(argv=None) -> int:
                     help="relative fresh-compile growth that counts as a "
                          "compile-cache regression (default 0.25; a "
                          "baseline of 0 gates exactly)")
+    ap.add_argument("--p99-threshold", type=float, default=0.5,
+                    help="relative p99 step-latency growth that counts as "
+                         "a tail-latency regression (default 0.5 = +50%%)")
     ap.add_argument("--schema-only", action="store_true",
                     help="validate structure + statuses only; never "
                          "report timing regressions")
@@ -297,7 +335,8 @@ def main(argv=None) -> int:
 
     code, messages = compare(base, cur, args.threshold, args.min_us,
                              evals_threshold=args.evals_threshold,
-                             compiles_threshold=args.compiles_threshold)
+                             compiles_threshold=args.compiles_threshold,
+                             p99_threshold=args.p99_threshold)
     if not args.quiet or code != OK:
         for m in messages:
             print(m, file=sys.stderr if code else sys.stdout)

@@ -15,16 +15,18 @@ from .cache import (CacheEntry, TuningCache, default_cache, shape_distance,
                     split_key)
 from .engine import EngineConfig, EngineStats, EvaluationEngine
 from .envknobs import env_bool, env_int, env_str, parse_bool
-from .evaluators import (CostModelEvaluator, Evaluator, KernelSpec,
-                         Measurement, TPUAnalyticalEvaluator,
-                         WallClockEvaluator, make_evaluator,
-                         median_prune_loop)
+from .evaluators import (ArrivalTraceEvaluator, CostModelEvaluator,
+                         Evaluator, KernelSpec, Measurement,
+                         TPUAnalyticalEvaluator, WallClockEvaluator,
+                         make_evaluator, median_prune_loop)
 from .failures import (CompileError, EvaluationError, EvaluationTimeout,
                        FailureRecord, InfeasibleConfigError, MeasureError,
                        RetryPolicy, TransientError, VerificationFailure,
                        summarize_failures)
 from .hlo import (CollectiveStats, canonicalize_hlo, collective_stats,
                   count_ops, fingerprint, fusion_stats)
+from .metrics import (DEFAULT_OBJECTIVE, Metrics, Objective,
+                      default_objective)
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
 from .registry import (REGISTRY, AutotunePolicy, KernelRegistry, Resolution,
@@ -47,9 +49,10 @@ __all__ = [
     "split_key",
     "EngineConfig", "EngineStats", "EvaluationEngine",
     "env_bool", "env_int", "env_str", "parse_bool",
-    "CostModelEvaluator", "Evaluator", "KernelSpec", "Measurement",
-    "TPUAnalyticalEvaluator", "WallClockEvaluator", "make_evaluator",
-    "median_prune_loop",
+    "ArrivalTraceEvaluator", "CostModelEvaluator", "Evaluator", "KernelSpec",
+    "Measurement", "TPUAnalyticalEvaluator", "WallClockEvaluator",
+    "make_evaluator", "median_prune_loop",
+    "DEFAULT_OBJECTIVE", "Metrics", "Objective", "default_objective",
     "CompileError", "EvaluationError", "EvaluationTimeout", "FailureRecord",
     "InfeasibleConfigError", "MeasureError", "RetryPolicy", "TransientError",
     "VerificationFailure", "summarize_failures",

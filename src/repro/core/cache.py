@@ -20,6 +20,13 @@ Cache format v2:
 * entries may carry a ``failures`` count (how many configs failed during
   the search behind this winner); absent means 0 and legacy entries stay
   byte-stable on save.
+* entries tuned under a **non-default objective** carry an ``objective``
+  spec and live under a 4-field ``kernel|shape_key|profile|obj=<spec>``
+  key: winners tuned under different objectives are incomparable, so the
+  key itself segregates them (merge keeps them side by side; ``nearest``
+  only transfers same-objective winners).  Default (``median_time``)
+  entries stay on 3-field keys with no ``objective`` field — byte-stable
+  with pre-objective files.
 
 Fleet merge (the distributed-tuning half, :mod:`repro.dtune`): many
 workers/replicas tune into *independent* caches that must converge on one
@@ -51,6 +58,7 @@ import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 from .envknobs import env_str
+from .metrics import DEFAULT_SPEC, Objective
 
 try:                                    # POSIX: real advisory file locks
     import fcntl
@@ -132,8 +140,35 @@ def _escape_field(field: str) -> str:
     return field.replace("\\", "\\\\").replace("|", "\\|")
 
 
-def _key(kernel: str, shape_key: str, profile: str) -> str:
-    return "|".join(_escape_field(f) for f in (kernel, shape_key, profile))
+#: marker prefix of the optional 4th key field carrying the objective spec
+OBJ_PREFIX = "obj="
+
+
+def normalize_objective(objective: "Objective | str | None"
+                         ) -> Optional[str]:
+    """Canonical objective spec for cache identity; None ≡ the default
+    (``median_time``), which keeps legacy keys and entries byte-stable."""
+    if objective is None:
+        return None
+    spec = str(objective)
+    if not spec or spec == DEFAULT_SPEC:
+        return None
+    # canonicalize through the parser so differently-spelled equal specs
+    # share one cache identity (including spellings of the default, e.g.
+    # "1*median_time")
+    spec = Objective.parse(spec).spec
+    return None if spec == DEFAULT_SPEC else spec
+
+
+def _key(kernel: str, shape_key: str, profile: str,
+         objective: "Objective | str | None" = None) -> str:
+    """Cache key; non-default objectives get a 4th ``obj=<spec>`` field so
+    winners tuned under different objectives can never compare."""
+    fields = [kernel, shape_key, profile]
+    obj = normalize_objective(objective)
+    if obj is not None:
+        fields.append(OBJ_PREFIX + obj)
+    return "|".join(_escape_field(f) for f in fields)
 
 
 def split_key(key: str) -> List[str]:
@@ -171,6 +206,11 @@ def _migrate_key(key: str) -> Optional[str]:
         return None                      # already v2-escaped
     parts = key.split("|")
     if len(parts) <= 3:
+        return None
+    if parts[-1].startswith(OBJ_PREFIX):
+        # a 4-field objective key whose fields happened to need no
+        # escaping — canonical, NOT a legacy v1 key (v1 predates
+        # objectives, so its last field is always a profile name)
         return None
     return _key(parts[0], "|".join(parts[1:-1]), parts[-1])
 
@@ -229,6 +269,9 @@ class CacheEntry:
     #: failed configs behind this winner's search (folded on merge); 0 on
     #: entries written before the field existed
     failures: int = 0
+    #: canonical spec of the objective this winner was tuned under; None
+    #: ≡ the default (``median_time``) — legacy entries stay byte-stable
+    objective: Optional[str] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -236,6 +279,8 @@ class CacheEntry:
             del d["shape"]               # keep legacy entries byte-stable
         if not d.get("failures"):
             del d["failures"]            # same: omit the zero default
+        if d.get("objective") is None:
+            del d["objective"]           # same: None ≡ median_time
         return d
 
     @classmethod
@@ -276,10 +321,11 @@ class TuningCache:
         #: changed-entry subscribers: fn(key, CacheEntry), called after a
         #: successful put() (see subscribe())
         self._subscribers: List[Callable[[str, "CacheEntry"], None]] = []
-        #: memoized (kernel, profile) -> [(key, decoded entry with shape)];
-        #: None = stale, rebuilt by the next nearest() (see _invalidate)
+        #: memoized (kernel, profile, objective) -> [(key, decoded entry
+        #: with shape)]; None = stale, rebuilt by the next nearest()
         self._shape_index: Optional[
-            Dict[Tuple[str, str], List[Tuple[str, CacheEntry]]]] = None
+            Dict[Tuple[str, str, Optional[str]],
+                 List[Tuple[str, CacheEntry]]]] = None
 
     # -- persistence ---------------------------------------------------------
     @staticmethod
@@ -392,6 +438,16 @@ class TuningCache:
         """
         if mine == theirs:
             return None
+        if (mine.get("objective") or None) != (theirs.get("objective") or None):
+            # winners tuned under different objectives are incomparable —
+            # a p99 winner must never beat a median winner on raw time_s.
+            # The key normally segregates objectives, so reaching here
+            # means a hand-edited or corrupted entry: keep ours, warn.
+            log.warning(
+                "cache: refusing to fold entries tuned under different "
+                "objectives (%r vs %r); keeping the existing entry",
+                mine.get("objective"), theirs.get("objective"))
+            return None
         win, lose = ((mine, theirs) if mine["time_s"] <= theirs["time_s"]
                      else (theirs, mine))
         out = dict(win)
@@ -480,22 +536,37 @@ class TuningCache:
                     log.exception("cache: change subscriber %r failed", fn)
 
     # -- access ---------------------------------------------------------------
-    def get(self, kernel: str, shape_key: str, profile: str) -> Optional[CacheEntry]:
+    def get(self, kernel: str, shape_key: str, profile: str,
+            objective: "Objective | str | None" = None
+            ) -> Optional[CacheEntry]:
         with self._lock:
             self._ensure_loaded()
-            raw = self._data.get(_key(kernel, shape_key, profile))
+            raw = self._data.get(_key(kernel, shape_key, profile, objective))
         return CacheEntry.from_json(raw) if raw else None
 
     def put(self, kernel: str, shape_key: str, profile: str,
-            entry: CacheEntry, only_if_better: bool = True) -> bool:
+            entry: CacheEntry, only_if_better: bool = True,
+            objective: "Objective | str | None" = None) -> bool:
         if not math.isfinite(entry.time_s):
             log.warning("cache: refusing non-finite time_s=%r for %s",
                         entry.time_s, _key(kernel, shape_key, profile))
             return False
-        k = _key(kernel, shape_key, profile)
+        # the entry's recorded objective and the key's objective field must
+        # agree — the explicit kwarg wins, else the entry's own field
+        obj = normalize_objective(
+            objective if objective is not None else entry.objective)
+        if (entry.objective or None) != obj:
+            entry = dataclasses.replace(entry, objective=obj)
+        k = _key(kernel, shape_key, profile, obj)
         with self._lock:
             self._ensure_loaded()
             old = self._data.get(k)
+            if old and (old.get("objective") or None) != obj:
+                log.warning(
+                    "cache: refusing to overwrite %s (tuned under objective "
+                    "%r) with a winner tuned under %r", k,
+                    old.get("objective"), obj)
+                return False
             if only_if_better and old and old["time_s"] <= entry.time_s:
                 return False
             self._data[k] = entry.to_json()
@@ -540,12 +611,16 @@ class TuningCache:
                config: Dict[str, Any], time_s: float, strategy: str,
                evaluations: int,
                shape: Optional[Mapping[str, Any]] = None,
-               failures: int = 0) -> bool:
+               failures: int = 0,
+               objective: "Objective | str | None" = None) -> bool:
         """Record a tuning winner; refuses non-finite times (a failed tune
         must never poison the cache other tools parse).  ``shape`` is the
         structured problem-dimension dict that makes the entry eligible
         for nearest-shape transfer; ``failures`` how many configs failed
-        during the search behind this winner (folded on fleet merge)."""
+        during the search behind this winner (folded on fleet merge);
+        ``objective`` the objective it was tuned under (non-default
+        objectives get their own key namespace — a p99 winner can never
+        displace or be compared against a median winner)."""
         if not math.isfinite(time_s):
             log.warning("cache: refusing to record non-finite time_s=%r "
                         "for kernel=%r shape=%r", time_s, kernel, shape_key)
@@ -554,52 +629,69 @@ class TuningCache:
             config=config, time_s=time_s, strategy=strategy,
             evaluations=evaluations, timestamp=time.time(),
             shape=dict(shape) if shape is not None else None,
-            failures=int(failures)))
+            failures=int(failures),
+            objective=normalize_objective(objective)))
 
     # -- shape transfer --------------------------------------------------------
-    def _shape_bucket(self, kernel: str, profile: str
+    def _shape_bucket(self, kernel: str, profile: str,
+                      objective: Optional[str] = None
                       ) -> List[Tuple[str, CacheEntry]]:
-        """Decoded shape-carrying entries for (kernel, profile), memoized.
+        """Decoded shape-carrying entries for (kernel, profile, objective),
+        memoized.
 
         The serve-path transfer lookup calls :meth:`nearest` on every
         cache miss; re-decoding the whole file each time is O(N) JSON
         work per lookup.  The index is invalidated (set to None) on
         put/load/merge/clear and rebuilt lazily here.  Buckets are never
         mutated in place, so a caller holding one across an invalidation
-        still sees a consistent snapshot.
+        still sees a consistent snapshot.  Buckets are objective-pure:
+        a default-objective lookup only ever sees 3-field keys, a p99
+        lookup only ``obj=p99_time`` keys — nearest-shape transfer never
+        compares winners tuned under different objectives.
         """
         with self._lock:
             self._ensure_loaded()
             if self._shape_index is None:
                 self._shape_index = {}
-            bucket = self._shape_index.get((kernel, profile))
+            bucket = self._shape_index.get((kernel, profile, objective))
             if bucket is None:
                 bucket = []
                 for key, raw in self._data.items():
                     fields = split_key(key)
-                    if len(fields) != 3 or fields[0] != kernel \
-                            or fields[2] != profile:
+                    if len(fields) == 3:
+                        key_obj = None
+                    elif (len(fields) == 4
+                          and fields[3].startswith(OBJ_PREFIX)):
+                        key_obj = fields[3][len(OBJ_PREFIX):]
+                    else:
+                        continue
+                    if fields[0] != kernel or fields[2] != profile \
+                            or key_obj != objective:
                         continue
                     entry = CacheEntry.from_json(raw)
                     if entry.shape is not None:
                         bucket.append((key, entry))
-                self._shape_index[(kernel, profile)] = bucket
+                self._shape_index[(kernel, profile, objective)] = bucket
             return bucket
 
     def nearest(self, kernel: str, shape: Mapping[str, Any], profile: str,
-                k: int = 3) -> List[CacheEntry]:
-        """The ``k`` tuned entries for (kernel, profile) nearest to ``shape``.
+                k: int = 3,
+                objective: "Objective | str | None" = None
+                ) -> List[CacheEntry]:
+        """The ``k`` tuned entries for (kernel, profile) nearest to ``shape``,
+        among winners tuned under the same ``objective`` only.
 
         Ordered by :func:`shape_distance` (log-space over shared numeric
         dims), nearest first; an exact-shape entry sorts first with
         distance 0.  Entries without a structured ``shape`` (pre-v2) and
         entries at infinite distance (no shared dims / mismatched
         non-numeric dims) are excluded.  Served from a per-(kernel,
-        profile) memoized index; returned entries are copies, safe to
-        mutate.
+        profile, objective) memoized index; returned entries are copies,
+        safe to mutate.
         """
+        obj = normalize_objective(objective)
         scored: List[Tuple[float, str, CacheEntry]] = []
-        for key, entry in self._shape_bucket(kernel, profile):
+        for key, entry in self._shape_bucket(kernel, profile, obj):
             d = shape_distance(shape, entry.shape)
             if math.isfinite(d):
                 scored.append((d, key, entry))

@@ -59,6 +59,7 @@ from .artifacts import CompiledArtifact
 from .evaluators import Evaluator, KernelSpec, Measurement
 from .failures import (CircuitBreakerTripped, CompileError, FailureRecord,
                        RetryPolicy, summarize_failures)
+from .metrics import Objective, default_objective
 from .space import Config, SearchSpace
 from .strategies import SearchResult, Strategy, Trial, accepts_kwarg
 
@@ -104,6 +105,12 @@ class EngineConfig:
     #: (``extra["aborted"]["stopped"] = True``) — the distributed
     #: coordinator uses this to reel in workers early.
     stop_event: Optional[Any] = None
+    #: what the search minimizes: an :class:`~repro.core.metrics.Objective`,
+    #: a spec string (``"p99_time"``, ``"0.7*median_time+0.3*p99_time"``)
+    #: or None for the session default (the ``REPRO_OBJECTIVE`` env spec
+    #: when set, else ``median_time`` — the legacy scalar path,
+    #: trial-identical to pre-objective behavior)
+    objective: "Objective | str | None" = None
 
     def __post_init__(self):
         if self.workers is None:
@@ -115,6 +122,10 @@ class EngineConfig:
         self.retry = RetryPolicy.normalize(self.retry)
         if self.max_failures is not None and self.max_failures < 1:
             raise ValueError("max_failures must be >= 1 (or None)")
+        # None defers to the session default (REPRO_OBJECTIVE env spec when
+        # set, else median_time) at construction time
+        self.objective = (default_objective() if self.objective is None
+                          else Objective.coerce(self.objective))
 
 
 @dataclasses.dataclass
@@ -286,7 +297,14 @@ class EvaluationEngine:
                     have_artifact = True
                 stage = "measure"
                 threshold = None
+                # measure-level pruning compares a *running median* of
+                # samples against the threshold — that statistic only
+                # matches the default (median_time) objective.  Tail
+                # objectives need the full sample vector, so pruning is
+                # disabled for them (the incumbent is in objective units,
+                # not median seconds).
                 if (cfg.prune_factor is not None
+                        and cfg.objective.is_default
                         and math.isfinite(self._incumbent)):
                     threshold = cfg.prune_factor * self._incumbent
                 t_meas0 = time.perf_counter()
@@ -350,6 +368,21 @@ class EvaluationEngine:
         return SearchResult(strategy.name, trials, best, len(trials),
                             extra={"aborted": aborted})
 
+    def _score(self, m: Measurement) -> float:
+        """Scalarize one measurement under the configured objective.
+
+        The default objective reads the legacy scalar directly — trials
+        stay byte-identical to pre-objective behavior (``time_s`` *is*
+        the median).  Non-default objectives scalarize the structured
+        metrics; failed or metrics-free measurements score ``inf``.
+        """
+        obj = self.config.objective
+        if obj.is_default:
+            return m.time_s
+        if not m.ok:
+            return math.inf
+        return obj.scalarize(m.as_metrics())
+
     def _attach_failures(self, result: SearchResult) -> None:
         """Give every failed trial its FailureRecord (by config identity)."""
         if not self.failures:
@@ -358,6 +391,17 @@ class EvaluationEngine:
             if trial.failure is None and not trial.ok:
                 trial.failure = self.failures.get(
                     self.space.config_key(trial.config))
+
+    def _attach_metrics(self, result: SearchResult) -> None:
+        """Give every trial its structured Metrics (by config identity),
+        mirroring :meth:`_attach_failures` — strategies' tell streams stay
+        scalar; the full vectors ride on the result."""
+        for trial in result.trials:
+            if trial.metrics is None:
+                m = self.measurements.get(
+                    self.space.config_key(trial.config))
+                if m is not None:
+                    trial.metrics = m.as_metrics()
 
     # -- the run loop --------------------------------------------------------
     def run(self, strategy: Strategy, budget: Optional[int],
@@ -436,10 +480,11 @@ class EvaluationEngine:
                         if m.pruned:
                             self.stats.pruned += 1
                     self.stats.evaluations += 1
-                    if m.ok and m.time_s < self._incumbent:
-                        self._incumbent = m.time_s
-                    results.append((config, m.time_s))
-                    self._history.append((dict(config), float(m.time_s)))
+                    score = self._score(m)
+                    if m.ok and score < self._incumbent:
+                        self._incumbent = score
+                    results.append((config, score))
+                    self._history.append((dict(config), float(score)))
                     if failure is not None:
                         try:
                             self._record_failure(key, failure)
@@ -463,6 +508,8 @@ class EvaluationEngine:
                 pool.shutdown(wait=False, cancel_futures=True)
         self.stats.wall_s = time.perf_counter() - t_run0
         self._attach_failures(result)
+        self._attach_metrics(result)
+        result.objective = self.config.objective.spec
         result.extra["engine"] = self.stats.as_dict()
         if self.failures:
             result.extra["failures"] = summarize_failures(

@@ -22,6 +22,7 @@ Three evaluators, one interface:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 import time
 import warnings
@@ -36,6 +37,7 @@ from .artifacts import (PROVENANCE_NONE, ArtifactStore, CompiledArtifact,
 from .failures import (CompileError, EvaluationError, InfeasibleConfigError,
                        MeasureError, VerificationFailure)
 from .hlo import collective_stats, fingerprint
+from .metrics import Metrics
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config
 
@@ -77,11 +79,26 @@ class Measurement:
                                         # tuning throughput)
     error: str = ""
     detail: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: full per-repeat sample vector + derived stats; None on failure or
+    #: from legacy backends that only produced a scalar
+    metrics: Optional[Metrics] = None
 
     @property
     def pruned(self) -> bool:
         """True when the measurement was aborted by early-stop pruning."""
         return bool(self.detail.get("pruned", False))
+
+    def as_metrics(self) -> Optional[Metrics]:
+        """The structured metrics behind this measurement.  Falls back to a
+        single-sample vector built from ``time_s`` for backends that never
+        attached one; None for failed measurements (scalarizes to inf)."""
+        if not self.ok:
+            return None
+        if self.metrics is not None:
+            return self.metrics
+        if not math.isfinite(self.time_s):
+            return None
+        return Metrics(samples=(self.time_s,), compile_s=self.compile_s)
 
 
 def median_prune_loop(sample: Callable[[], float], repeats: int,
@@ -311,7 +328,9 @@ class WallClockEvaluator(Evaluator):
         if pruned:
             detail["pruned"] = True
         return Measurement(time_s=t, ok=True, verified=verified,
-                           compile_s=compile_s, detail=detail)
+                           compile_s=compile_s, detail=detail,
+                           metrics=Metrics(samples=tuple(samples),
+                                           compile_s=compile_s))
 
 
 class CostModelEvaluator(Evaluator):
@@ -414,7 +433,8 @@ class CostModelEvaluator(Evaluator):
             detail={"flops": flops, "bytes": bytes_,
                     "collective_bytes": coll,
                     "compute_t": compute_t, "memory_t": memory_t,
-                    "collective_t": coll_t})
+                    "collective_t": coll_t},
+            metrics=Metrics(samples=(t,), compile_s=compile_s, work=flops))
 
     def analyze(self, spec: KernelSpec, config: Config) -> Measurement:
         return self._evaluate(spec, config)
@@ -439,18 +459,33 @@ class TPUAnalyticalEvaluator(Evaluator):
     name = "analytical"
 
     def __init__(self, profile: DeviceProfile = TPU_V5E,
-                 noise_sigma: float = 0.03, seed: int = 0):
+                 noise_sigma: float = 0.03, seed: int = 0,
+                 repeats: int = 5):
         self.profile = profile
         self.noise_sigma = noise_sigma
         self.seed = seed
+        self.repeats = max(1, repeats)
+
+    def _noise_rng(self, config: Config) -> np.random.Generator:
+        h = hash((self.seed,) + tuple(sorted(
+            (k, str(v)) for k, v in config.items()))) & 0xFFFFFFFF
+        return np.random.default_rng(h)
 
     def _noise(self, config: Config) -> float:
         if self.noise_sigma <= 0:
             return 1.0
-        h = hash((self.seed,) + tuple(sorted(
-            (k, str(v)) for k, v in config.items()))) & 0xFFFFFFFF
-        rng = np.random.default_rng(h)
+        rng = self._noise_rng(config)
         return float(np.exp(rng.normal(0.0, self.noise_sigma)))
+
+    def _noise_samples(self, config: Config, n: int) -> List[float]:
+        """n deterministic noise factors; the first is byte-identical to
+        :meth:`_noise` (same rng construction, first draw) so the scalar
+        ``time_s`` is unchanged by the metrics extension."""
+        if self.noise_sigma <= 0:
+            return [1.0] * n
+        rng = self._noise_rng(config)
+        return [float(np.exp(rng.normal(0.0, self.noise_sigma)))
+                for _ in range(n)]
 
     def measure(self, spec: KernelSpec, config: Config,
                 prepared=None,
@@ -464,8 +499,91 @@ class TPUAnalyticalEvaluator(Evaluator):
             raise MeasureError(f"{type(e).__name__}: {e}") from e
         if not math.isfinite(t):
             raise InfeasibleConfigError("analytically infeasible (VMEM/limits)")
-        return Measurement(time_s=t * self._noise(config), ok=True,
-                           detail={"model_time_s": t})
+        noise = self._noise_samples(config, self.repeats)
+        samples = tuple(t * n for n in noise)
+        return Measurement(time_s=samples[0], ok=True,
+                           detail={"model_time_s": t},
+                           metrics=Metrics(samples=samples))
+
+
+class ArrivalTraceEvaluator(Evaluator):
+    """Price one configuration against a modeled **arrival trace**.
+
+    SLO tuning measures a config against the traffic *distribution*, not
+    one fixed geometry: the sample vector has one entry per traced
+    arrival shape (times seeded log-normal jitter), so a p99 objective
+    over these metrics is literally "the tail of the modeled trace".
+    The first traced shape is the bucket's full (padded) geometry; a
+    config must be feasible there, or the whole config raises
+    :class:`InfeasibleConfigError`.  A *ragged* arrival the config
+    cannot cover (e.g. a block size that does not divide that arrival's
+    shape) is not infeasible — serving pads such a request up to the
+    bucket bound, so the sample for that arrival is the full-geometry
+    cost.  Configs with finer tiles therefore win on ragged tails
+    exactly as they do in the real padded serve path.
+
+    ``model(shape, config, profile) -> seconds`` matches the signature of
+    a :class:`~repro.core.registry.TunableKernel`'s ``analytical_model``,
+    so a kernel's registered model plugs in directly.  ``time_s`` stays
+    the median of the trace (the legacy scalar contract); tail objectives
+    read the full vector through ``Measurement.metrics``.
+    """
+
+    name = "trace"
+
+    def __init__(self, model: Callable[[Dict[str, Any], Config, DeviceProfile],
+                                       float],
+                 trace, profile: DeviceProfile = TPU_V5E,
+                 noise_sigma: float = 0.03, seed: int = 0):
+        if not trace:
+            raise ValueError("ArrivalTraceEvaluator requires a non-empty trace")
+        self.model = model
+        self.trace = tuple(dict(s) for s in trace)
+        self.profile = profile
+        self.noise_sigma = noise_sigma
+        self.seed = seed
+
+    def _noise(self, config: Config, index: int) -> float:
+        if self.noise_sigma <= 0:
+            return 1.0
+        # stable digest, NOT hash(): str hashing is per-process randomized
+        # and a retune winner must reproduce across processes/hosts
+        text = repr((self.seed, index) + tuple(sorted(
+            (k, str(v)) for k, v in config.items())))
+        h = int.from_bytes(hashlib.sha256(text.encode()).digest()[:4], "big")
+        rng = np.random.default_rng(h)
+        return float(np.exp(rng.normal(0.0, self.noise_sigma)))
+
+    def measure(self, spec: KernelSpec, config: Config,
+                prepared=None,
+                prune_threshold_s: Optional[float] = None) -> Measurement:
+        samples: List[float] = []
+        padded = 0
+        full_t: Optional[float] = None
+        for i, shape in enumerate(self.trace):
+            try:
+                t = float(self.model(shape, config, self.profile))
+            except Exception as e:  # noqa: BLE001
+                raise MeasureError(f"{type(e).__name__}: {e}") from e
+            if not math.isfinite(t):
+                if full_t is None:
+                    # the bucket's own geometry (trace[0]) must work
+                    raise InfeasibleConfigError(
+                        f"infeasible at bucket geometry {shape!r}")
+                # ragged arrival the tiles can't cover: serving pads it
+                # up to the bucket bound, so it costs the full geometry
+                t = full_t
+                padded += 1
+            if full_t is None:
+                full_t = t
+            samples.append(t * self._noise(config, i))
+        return Measurement(
+            time_s=float(np.median(samples)), ok=True,
+            detail={"trace_len": float(len(samples)),
+                    "padded_arrivals": float(padded),
+                    "min_s": float(np.min(samples)),
+                    "max_s": float(np.max(samples))},
+            metrics=Metrics(samples=tuple(samples)))
 
 
 def make_evaluator(name: str, **kwargs) -> Evaluator:
@@ -473,6 +591,7 @@ def make_evaluator(name: str, **kwargs) -> Evaluator:
         "wallclock": WallClockEvaluator,
         "costmodel": CostModelEvaluator,
         "analytical": TPUAnalyticalEvaluator,
+        "trace": ArrivalTraceEvaluator,
     }
     try:
         return table[name](**kwargs)

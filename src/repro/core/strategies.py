@@ -28,7 +28,11 @@ from .space import Config, SearchSpace
 
 log = logging.getLogger("repro.strategies")
 
-Objective = Callable[[Config], float]
+#: scalar objective function over one config — lower is better.  Renamed
+#: from ``Objective``: the *typed* objective identity (median/p99/weighted
+#: specs) now lives in :class:`repro.core.metrics.Objective`; strategies
+#: only ever see the already-scalarized callable.
+ObjectiveFn = Callable[[Config], float]
 
 
 def accepts_kwarg(fn: Callable, kwarg: str) -> bool:
@@ -93,11 +97,16 @@ class Trial:
     """One evaluated configuration."""
 
     config: Config
-    time: float                 # seconds (inf = failed/infeasible)
+    time: float                 # objective score (inf = failed/infeasible);
+                                # seconds under time-based objectives
     index: int                  # evaluation order, 0-based
     #: populated (by the evaluation engine) when this trial is a failed
     #: configuration: the structured why — stage, exception type, message
     failure: Optional[FailureRecord] = None
+    #: populated (by the evaluation engine) with the structured
+    #: :class:`~repro.core.metrics.Metrics` behind this trial — the full
+    #: per-repeat sample vector the scalar ``time`` collapsed
+    metrics: Optional[Any] = None
 
     @property
     def ok(self) -> bool:
@@ -112,6 +121,10 @@ class SearchResult:
     evaluations: int
     #: per-strategy extras (e.g. PSO per-particle traces)
     extra: Dict[str, object] = dataclasses.field(default_factory=dict)
+    #: canonical spec of the objective that ranked these trials (set by
+    #: the evaluation engine; None from bare ``Strategy.run`` calls,
+    #: which are always scalar and therefore default-objective)
+    objective: Optional[str] = None
 
     @property
     def best_time(self) -> float:
@@ -151,7 +164,7 @@ class _Recorder:
     were actually measured.
     """
 
-    def __init__(self, space: SearchSpace, objective: Objective):
+    def __init__(self, space: SearchSpace, objective: ObjectiveFn):
         self._space = space
         self._objective = objective
         self._seen: Dict[Tuple, float] = {}
@@ -198,7 +211,7 @@ class Strategy:
 
     name = "base"
 
-    def run(self, space: SearchSpace, objective: Objective,
+    def run(self, space: SearchSpace, objective: ObjectiveFn,
             budget: int, seed: int = 0,
             seeds: Optional[Sequence[Config]] = None) -> SearchResult:
         raise NotImplementedError

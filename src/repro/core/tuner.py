@@ -63,6 +63,8 @@ class TuningOutcome:
     budget: Optional[int] = None
     #: EvaluationEngine observability record (None on engine-less paths)
     engine_stats: Optional[Dict[str, Any]] = None
+    #: canonical spec of the objective the search minimized
+    objective: Optional[str] = None
 
     @property
     def best_config(self) -> Optional[Config]:
@@ -260,6 +262,7 @@ class Tuner:
              shape_key: str = "",
              engine: "EngineConfig | Dict[str, Any] | None" = None,
              seeds: Optional[Sequence[Config]] = None,
+             objective: "str | Any | None" = None,
              **strategy_kwargs) -> TuningOutcome:
         """Search the space; all evaluation flows through the
         :class:`~repro.core.engine.EvaluationEngine` (``engine`` takes an
@@ -268,7 +271,14 @@ class Tuner:
 
         ``seeds`` warm-start the search: the strategy evaluates these
         configs first (infeasible ones are silently dropped), so a
-        transferred nearest-shape winner cuts evaluations-to-target."""
+        transferred nearest-shape winner cuts evaluations-to-target.
+
+        ``objective`` selects what the search minimizes — an
+        :class:`~repro.core.metrics.Objective`, a spec string
+        (``"p99_time"``) or None for the engine config's objective
+        (default ``median_time``).  The resolved objective rides on the
+        outcome and is recorded with any cached winner, keyed so winners
+        under different objectives never compare."""
         if self._spec is None:
             raise ValueError("no kernel registered; call add_kernel first")
         if self.space.num_dimensions == 0:
@@ -290,6 +300,8 @@ class Tuner:
 
         if not isinstance(engine, EngineConfig):
             engine = EngineConfig(**(engine or {}))
+        if objective is not None:
+            engine = dataclasses.replace(engine, objective=objective)
         eng = EvaluationEngine(self.evaluator, self._spec, self.space,
                                config=engine)
         result = eng.run(strat, budget, seed=seed,
@@ -300,11 +312,13 @@ class Tuner:
             log.warning("tuning aborted: %s",
                         result.extra["aborted"].get("reason"))
 
+        resolved_objective = engine.objective
         outcome = TuningOutcome(
             kernel=self._spec.name, result=result,
             measurements=dict(eng.measurements),
             evaluator=self.evaluator.name, profile=self.profile.name,
-            budget=budget, engine_stats=result.extra.get("engine"))
+            budget=budget, engine_stats=result.extra.get("engine"),
+            objective=resolved_objective.spec)
         if record_to_cache and result.best is not None:
             cache = self._cache if self._cache is not None else default_cache()
             # from_tunable stashes the problem shape in the spec's meta; a
@@ -315,6 +329,7 @@ class Tuner:
                          self.profile.name, result.best.config,
                          result.best.time, result.strategy,
                          result.evaluations, shape=shape,
-                         failures=len(eng.failures))
+                         failures=len(eng.failures),
+                         objective=resolved_objective)
             cache.save()
         return outcome

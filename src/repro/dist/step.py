@@ -9,7 +9,8 @@ at reduced depth for cost measurement.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+import dataclasses
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,12 +75,45 @@ def make_prefill_step(cfg, run: RunConfig = DEFAULT_RUN):
     return step
 
 
-def make_serve_step(cfg, run: RunConfig = DEFAULT_RUN, greedy: bool = False):
+def apply_kernel_configs(cfg, run: RunConfig,
+                         kernel_configs: Optional[Mapping[str, Mapping[str, Any]]]
+                         ) -> RunConfig:
+    """Fold registry-resolved kernel configs into the execution knobs.
+
+    The serve-path gemm is the LM-head matmul; its tuned ``BLOCK_N``
+    becomes the head's vocab tile (:attr:`RunConfig.head_chunk`) when it
+    divides the vocab — so a tuned (or hot-swapped) winner is visible in
+    the lowered step, not just bookkeeping.  An explicit ``head_chunk``
+    on ``run`` always wins; infeasible tiles fall back to the unchunked
+    head.
+    """
+    if not kernel_configs or run.head_chunk:
+        return run
+    gemm = kernel_configs.get("gemm") or {}
+    try:
+        block_n = int(gemm.get("BLOCK_N", 0) or 0)
+    except (TypeError, ValueError):
+        return run
+    V = cfg.vocab_size
+    if 0 < block_n < V and V % block_n == 0:
+        return dataclasses.replace(run, head_chunk=block_n)
+    return run
+
+
+def make_serve_step(cfg, run: RunConfig = DEFAULT_RUN, greedy: bool = False,
+                    kernel_configs: Optional[Mapping[str, Mapping[str, Any]]]
+                    = None):
     """(params, cache, tokens, pos) -> (next, cache) for one decode step.
 
     ``greedy=True`` returns argmax token ids (B,) int32; otherwise the raw
     logits (B, V) so samplers can be applied outside the jitted step.
+
+    ``kernel_configs`` is the ``{kernel: config}`` map the serving engine
+    resolved (and hot-swaps) for this geometry; it is folded into ``run``
+    via :func:`apply_kernel_configs` so the step function actually
+    executes with the tuned block geometry.
     """
+    run = apply_kernel_configs(cfg, run, kernel_configs)
 
     def step(params, cache, tokens, pos):
         logits, new_cache = decode_step(cfg, params, cache, tokens, pos, run)

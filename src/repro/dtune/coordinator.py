@@ -132,7 +132,8 @@ class DistributedTuner:
                  extended_space: Optional[bool] = None,
                  warm_start: "bool | int" = True,
                  seed: int = 0,
-                 record: bool = True):
+                 record: bool = True,
+                 objective: "str | Any | None" = None):
         self.kernel = resolve(kernel)
         self.shape = dict(shape)
         self.n_workers = (n_workers if n_workers is not None
@@ -156,6 +157,14 @@ class DistributedTuner:
             raise ValueError("pass no stop_event; the coordinator owns "
                              "cancellation (use DistributedTuner.stop())")
         self.engine.pop("stop_event", None)
+        if objective is not None:
+            self.engine["objective"] = objective
+        # the objective travels to (possibly spawned) workers inside the
+        # engine kwargs dict — canonicalize to its spec string so the dict
+        # stays plain picklable data
+        if self.engine.get("objective") is not None:
+            self.engine["objective"] = str(self.engine["objective"])
+        self.objective: Optional[str] = self.engine.get("objective")
         self.interpret = interpret
         if extended_space is None:
             extended_space = bool(
@@ -186,7 +195,8 @@ class DistributedTuner:
         from ..tune.api import warm_start_seeds
         return warm_start_seeds(self.kernel, self.shape,
                                 profile=self.profile, cache=self.cache,
-                                k_nearest=k_nearest) or None
+                                k_nearest=k_nearest,
+                                objective=self.objective) or None
 
     # -- execution ------------------------------------------------------------
     def run(self, timeout_s: Optional[float] = None) -> DistributedOutcome:

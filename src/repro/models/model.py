@@ -46,6 +46,11 @@ class RunConfig:
     #: at a time (checkpointed scan).  0 = whole-sequence logits.  Essential
     #: when the vocab does not divide the model axis (logits replicated).
     ce_chunk: int = 0
+    #: vocab-chunked LM head: the (d, V) head matmul is issued as V/chunk
+    #: column tiles (the serve path derives this from the tuned gemm
+    #: BLOCK_N, so a hot-swapped winner changes the lowered step).  0 =
+    #: one whole-vocab einsum; ignored unless it divides the vocab exactly.
+    head_chunk: int = 0
 
     def remat_policy(self):
         if self.remat == "none":
@@ -206,18 +211,31 @@ def embed_inputs(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]
     return x, positions
 
 
-def _head_logits(cfg: ModelConfig, params, x_normed) -> jax.Array:
+def _head_logits(cfg: ModelConfig, params, x_normed,
+                 run: RunConfig = DEFAULT_RUN) -> jax.Array:
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = jnp.einsum("bsd,dv->bsv", x_normed, head)
+    V = cfg.vocab_size
+    hc = int(run.head_chunk)
+    if 0 < hc < V and V % hc == 0:
+        # column-tiled head matmul: numerically identical to the single
+        # einsum, but the lowering carries the tile width — which is how a
+        # tuned gemm BLOCK_N becomes visible in the jitted decode step
+        logits = jnp.concatenate(
+            [jnp.einsum("bsd,dv->bsv", x_normed,
+                        lax.slice_in_dim(head, i * hc, (i + 1) * hc, axis=1))
+             for i in range(V // hc)], axis=-1)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x_normed, head)
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)
     return shard(logits, "batch", "seq", "vocab")
 
 
-def _logits(cfg: ModelConfig, params, x) -> jax.Array:
+def _logits(cfg: ModelConfig, params, x,
+            run: RunConfig = DEFAULT_RUN) -> jax.Array:
     return _head_logits(cfg, params,
-                        rms_norm(x, params["final_norm"], cfg.norm_eps))
+                        rms_norm(x, params["final_norm"], cfg.norm_eps), run)
 
 
 def forward_hidden(cfg: ModelConfig, params, batch,
@@ -282,7 +300,7 @@ def forward(cfg: ModelConfig, params, batch,
             run: RunConfig = DEFAULT_RUN) -> Tuple[jax.Array, jax.Array]:
     """Full-sequence forward.  Returns (logits (B,S,V), aux_loss scalar)."""
     x, aux = forward_hidden(cfg, params, batch, run)
-    return _head_logits(cfg, params, x), aux
+    return _head_logits(cfg, params, x, run), aux
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,
@@ -475,5 +493,5 @@ def decode_step(cfg: ModelConfig, params, cache, tokens_or_embeds,
         x, nc = scan_attn(params["blocks"], cache["blocks"], x, "dense")
         new_cache["blocks"] = nc
 
-    logits = _logits(cfg, params, x)[:, 0]
+    logits = _logits(cfg, params, x, run)[:, 0]
     return logits, new_cache

@@ -25,12 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import kernels  # noqa: F401 — populates the tunable registry
-from ..core.cache import CacheEntry, TuningCache, default_cache, split_key
-from ..core.envknobs import env_bool
+from ..core.cache import (CacheEntry, OBJ_PREFIX, TuningCache, default_cache,
+                          normalize_objective, split_key)
+from ..core.envknobs import env_bool, env_str
+from ..core.evaluators import ArrivalTraceEvaluator
 from ..core.profiles import DeviceProfile, TPU_V5E
 from ..core.registry import (AutotunePolicy, REGISTRY, Resolution,
                              lookup_resolved)
-from ..dist.step import make_serve_step
+from ..dist.step import apply_kernel_configs, make_serve_step
 from ..models.config import ModelConfig
 from ..models.model import RunConfig, init_cache
 from .online import (BackgroundTuner, ConfigSlot, OnlineTuneConfig,
@@ -41,11 +43,46 @@ log = logging.getLogger("repro.serve")
 #: env var enabling online (background) serve-path retuning by default
 _ONLINE_ENV_VAR = "REPRO_ONLINE_TUNE"
 
+#: env var overriding the bucketed engine's shape buckets (comma-separated
+#: max_len values, e.g. ``REPRO_SERVE_BUCKETS=128,512,2048``)
+_BUCKETS_ENV_VAR = "REPRO_SERVE_BUCKETS"
+
+#: default shape buckets (max decode lengths) for BucketedServeEngine
+DEFAULT_BUCKETS = (128, 256, 512)
+
 
 def _online_tune_from_env() -> bool:
     # strict parse (envknobs): REPRO_ONLINE_TUNE=2 / =enable raises instead
     # of silently landing on either side of the feature flag
     return env_bool(_ONLINE_ENV_VAR, False)
+
+
+def buckets_from_env(default=DEFAULT_BUCKETS):
+    """Shape buckets from ``REPRO_SERVE_BUCKETS`` (sorted, deduplicated).
+
+    Strict parse, same stance as the other env knobs: a malformed or
+    empty list raises instead of silently serving with default buckets.
+    """
+    raw = env_str(_BUCKETS_ENV_VAR, None)
+    if raw is None:
+        return tuple(default)
+    vals = []
+    for part in raw.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            v = int(part)
+        except ValueError as e:
+            raise ValueError(
+                f"{_BUCKETS_ENV_VAR}={raw!r}: {part!r} is not an int") from e
+        if v <= 0:
+            raise ValueError(
+                f"{_BUCKETS_ENV_VAR}={raw!r}: bucket {v} must be positive")
+        vals.append(v)
+    if not vals:
+        raise ValueError(f"{_BUCKETS_ENV_VAR}={raw!r}: no buckets")
+    return tuple(sorted(set(vals)))
 
 
 def resolve_kernel_resolutions(cfg: ModelConfig, slots: int, max_len: int, *,
@@ -130,13 +167,12 @@ class ServeEngine:
     steps never observe a torn update, and ``swap_events`` records the
     step at which each upgrade took effect.
 
-    NB: the jitted decode step does not yet *consume* ``kernel_configs``
-    (``make_serve_step`` closes over the model config only; the resolved
-    configs are the registry's answer for this geometry, read through the
-    slot each step).  The hot-swap contract guarded here — atomic
-    step-boundary upgrades, zero dropped/corrupted requests, failed
-    searches leave the serving config standing — is exactly what wiring
-    the configs into the step function will inherit.
+    The jitted decode step *consumes* ``kernel_configs``: the resolved
+    (or hot-swapped) gemm winner's block geometry is folded into the step
+    function via :func:`~repro.dist.step.apply_kernel_configs`, so an
+    upgrade changes the lowered computation, not just bookkeeping.  Step
+    functions are memoized per derived :class:`RunConfig` — a swap that
+    does not change the derived execution knobs reuses the compiled step.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
@@ -170,12 +206,31 @@ class ServeEngine:
         self._steps_total = 0
         self._closed = False
         self.cache = init_cache(cfg, slots, max_len)
-        self._step = jax.jit(make_serve_step(cfg, run, greedy=True))
+        self.run_config = run
+        #: jitted decode steps, memoized by the RunConfig the resolved
+        #: kernel configs fold down to (frozen dataclass — hashable)
+        self._jit_steps: Dict[RunConfig, Any] = {}
+        self._step = self._step_for(self._step_configs)
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_pos = np.zeros(slots, np.int32)   # next write position
         self._queue: List[Request] = []
         self._pos = 0                                 # global decode position
         self._init_online(online_tune)
+
+    def _step_for(self, configs: Dict[str, Dict[str, Any]]):
+        """The jitted decode step for one kernel-config snapshot.
+
+        ``apply_kernel_configs`` folds the snapshot into the engine's
+        RunConfig (tuned gemm BLOCK_N -> LM-head vocab tile); distinct
+        derived RunConfigs get distinct jitted steps, identical ones
+        share the compiled function.
+        """
+        derived = apply_kernel_configs(self.cfg, self.run_config, configs)
+        step = self._jit_steps.get(derived)
+        if step is None:
+            step = jax.jit(make_serve_step(self.cfg, derived, greedy=True))
+            self._jit_steps[derived] = step
+        return step
 
     # -- online tuning ---------------------------------------------------------
     def _init_online(self, online_tune) -> None:
@@ -212,10 +267,15 @@ class ServeEngine:
             self.tuner = BackgroundTuner(cache=self._cache, config=knobs,
                                          profile=self.profile)
             self._owns_tuner = True
-        # watch the cache for our (kernel, shape-key, profile) triples: the
-        # background winner lands there first, then hot-swaps in here
+        # watch the cache for our (kernel, shape-key, profile, objective)
+        # quads: the background winner lands there first, then hot-swaps in
+        # here.  The objective is the tuner's — a p99-tuned winner lands
+        # under an obj=-scoped key and must not be missed, while a
+        # median-tuned entry for the same geometry must not hot-swap into
+        # an engine retuning for p99.
+        obj = normalize_objective(self.tuner.config.objective)
         for name, res in self.kernel_resolutions.items():
-            self._watched[(res.kernel, res.key, res.profile)] = name
+            self._watched[(res.kernel, res.key, res.profile, obj)] = name
         self._cache.subscribe(self._on_cache_change)
         self.tune_jobs = submit_for_resolutions(self.tuner,
                                                 self.kernel_resolutions)
@@ -227,9 +287,13 @@ class ServeEngine:
         if self._closed:
             return
         fields = split_key(key)
-        if len(fields) != 3:
+        if len(fields) == 3:
+            triple, obj = tuple(fields), None
+        elif len(fields) == 4 and fields[3].startswith(OBJ_PREFIX):
+            triple, obj = tuple(fields[:3]), fields[3][len(OBJ_PREFIX):]
+        else:
             return
-        name = self._watched.get(tuple(fields))
+        name = self._watched.get(triple + (obj,))
         if name is None:
             return
         # re-read the authoritative entry rather than trusting the
@@ -237,7 +301,7 @@ class ServeEngine:
         # arrive out of order, and the cache's only_if_better semantics
         # make the *current* entry the best one — a stale late
         # notification then swaps in the same (current) config, a no-op
-        current = self._cache.get(*fields)
+        current = self._cache.get(*triple, objective=obj)
         if current is None:
             return
         gen = self._slot.swap(name, dict(current.config))
@@ -308,6 +372,10 @@ class ServeEngine:
                 log.info("online: step %d now running generation %d "
                          "(changed: %s)", self._steps_total, gen, changed)
                 self._seen_generation = gen
+                # fold the upgraded configs into the jitted step (memoized:
+                # a swap that derives the same RunConfig reuses the
+                # compiled function; KV cache and positions carry over)
+                self._step = self._step_for(configs)
             self._step_configs = configs
             if on_step is not None:
                 on_step(self, self._steps_total)
@@ -369,3 +437,216 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self._slot_req[i] = None
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed serving (SLO / tail-latency path)
+# ---------------------------------------------------------------------------
+
+#: deterministic occupancy fractions a bucket's modeled arrivals cycle
+#: through — quarter-quantized so traced geometries stay multiples of a
+#: quarter of the bucket bound (block-alignment-friendly for pow2 buckets)
+_TRACE_FRACTIONS = (1.0, 0.5, 0.75, 0.25)
+
+
+def modeled_arrival_trace(shape: Dict[str, Any], arrivals: int = 8,
+                          min_dim: int = 64) -> List[Dict[str, Any]]:
+    """Deterministic ragged-arrival trace for one tuned shape bucket.
+
+    Real traffic rarely fills a bucket: a request padded into a
+    ``max_len=512`` bucket may only occupy 150 positions.  Each modeled
+    arrival scales the shape's large integer dims (>= ``min_dim``) to a
+    fraction of the bucket bound, quantized to quarters so the geometries
+    stay block-aligned.  The trace is pure data — the same bucket always
+    models the same arrivals, which keeps p99 retunes reproducible.
+    """
+    if arrivals <= 0:
+        raise ValueError(f"arrivals must be positive, got {arrivals}")
+    dims = [k for k, v in shape.items()
+            if isinstance(v, int) and not isinstance(v, bool)
+            and v >= min_dim]
+    trace: List[Dict[str, Any]] = []
+    for i in range(arrivals):
+        frac = _TRACE_FRACTIONS[i % len(_TRACE_FRACTIONS)]
+        s = dict(shape)
+        for d in dims:
+            v = shape[d]
+            quarter = max(1, v // 4)
+            s[d] = max(quarter, int(round(v * frac / quarter)) * quarter)
+        trace.append(s)
+    return trace
+
+
+def trace_evaluator_factory(arrivals: int = 8, noise_sigma: float = 0.03,
+                            seed: int = 0):
+    """(kernel, shape, profile) -> ArrivalTraceEvaluator factory for
+    :class:`~repro.serve.online.OnlineTuneConfig.evaluator_factory`.
+
+    Prices every candidate at each modeled arrival of the bucket via the
+    kernel's ``analytical_model``; a config infeasible at *any* traced
+    geometry is rejected outright, so a p99 winner is feasible across the
+    whole bucket, not just at its padded bound.
+    """
+    def factory(k, shape, profile):
+        model = getattr(k, "analytical_model", None)
+        if model is None:
+            raise ValueError(
+                f"kernel {k.name!r} declares no analytical_model; "
+                f"trace-based SLO retuning needs one")
+        return ArrivalTraceEvaluator(
+            model, modeled_arrival_trace(dict(shape), arrivals=arrivals),
+            profile=profile, noise_sigma=noise_sigma, seed=seed)
+    return factory
+
+
+class BucketedServeEngine:
+    """Shape-bucketed serving: quantize ragged geometries into tuned
+    buckets, retune each bucket for tail latency.
+
+    A single :class:`ServeEngine` serves every request at one padded
+    ``max_len`` — a 40-token request pays the decode cost of the full
+    geometry, and its tuned configs are whatever won at that one shape.
+    This engine instead keeps one ServeEngine per *bucket* (ascending
+    ``max_len`` bounds): admission assigns each request to the smallest
+    bucket it fits (prompt + max_new_tokens), so short requests decode
+    against short KV caches, and each bucket's kernel configs are resolved
+    — and background-retuned — for *its* geometry.
+
+    All buckets share one tuning cache and one
+    :class:`~repro.serve.online.BackgroundTuner` whose objective defaults
+    to ``p99_time`` over a deterministic modeled arrival trace
+    (:func:`modeled_arrival_trace`): the winner recorded for a bucket
+    must be fast at the tail of the arrivals it actually absorbs, not
+    just at its padded bound.  Winners land under objective-scoped cache
+    keys and hot-swap into exactly the bucket that watches them —
+    per-bucket isolation is the cache-key structure, not bookkeeping.
+
+    ``REPRO_SERVE_BUCKETS`` (comma-separated max_lens) overrides the
+    default buckets when ``buckets`` is not passed.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 buckets=None, slots: int = 4, run: RunConfig = RunConfig(),
+                 profile: DeviceProfile = TPU_V5E,
+                 autotune: "AutotunePolicy | str | None" = None,
+                 cache: Optional[TuningCache] = None,
+                 online_tune: ("bool | dict | OnlineTuneConfig | "
+                               "BackgroundTuner | None") = None,
+                 objective: Optional[str] = "p99_time",
+                 trace_arrivals: int = 8):
+        if buckets is None:
+            buckets = buckets_from_env()
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.buckets or self.buckets[0] <= 0:
+            raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+        self.cfg = cfg
+        self.profile = profile
+        self.objective = normalize_objective(objective)
+        self._cache = cache if cache is not None else default_cache()
+        self._owns_tuner = False
+        self.tuner = self._make_tuner(online_tune, objective, trace_arrivals)
+        #: bucket max_len -> the ServeEngine serving that geometry
+        self.engines: Dict[int, ServeEngine] = {}
+        for b in self.buckets:
+            self.engines[b] = ServeEngine(
+                cfg, params, slots=slots, max_len=b, run=run,
+                profile=profile, autotune=autotune, cache=self._cache,
+                online_tune=self.tuner if self.tuner is not None else False)
+        #: requests refused at admission (no bucket fits), by rid
+        self.rejected: List[Request] = []
+        self._closed = False
+
+    def _make_tuner(self, online_tune, objective, trace_arrivals
+                    ) -> Optional[BackgroundTuner]:
+        """One BackgroundTuner shared by every bucket (or None = offline).
+
+        Bool/None/dict/OnlineTuneConfig follow ServeEngine's coercion
+        rules; when the knobs don't pin an evaluator_factory or objective
+        the SLO defaults apply — trace evaluation under this engine's
+        objective.
+        """
+        if isinstance(online_tune, BackgroundTuner):
+            return online_tune
+        if online_tune is None:
+            online_tune = _online_tune_from_env()
+        if isinstance(online_tune, bool):
+            if not online_tune:
+                return None
+            knobs = OnlineTuneConfig()
+        elif isinstance(online_tune, OnlineTuneConfig):
+            knobs = online_tune
+        elif isinstance(online_tune, dict):
+            knobs = OnlineTuneConfig(**online_tune)
+        else:
+            raise TypeError(
+                f"online_tune must be a bool, dict, OnlineTuneConfig or "
+                f"BackgroundTuner, got {type(online_tune).__name__!s}: "
+                f"{online_tune!r}")
+        if knobs.objective is None and objective is not None:
+            knobs = dataclasses.replace(knobs, objective=objective)
+        if knobs.evaluator_factory is None:
+            knobs = dataclasses.replace(
+                knobs, evaluator_factory=trace_evaluator_factory(
+                    arrivals=trace_arrivals, seed=knobs.seed))
+        self._owns_tuner = True
+        return BackgroundTuner(cache=self._cache, config=knobs,
+                               profile=self.profile)
+
+    # -- admission -------------------------------------------------------------
+    def bucket_for(self, req: Request) -> Optional[int]:
+        """Smallest bucket the request fits, or None (admission refusal)."""
+        needed = len(req.prompt) + req.max_new_tokens
+        for b in self.buckets:
+            if needed <= b:
+                return b
+        return None
+
+    def submit(self, req: Request) -> Optional[int]:
+        """Admit a request into its bucket; returns the bucket max_len, or
+        None when no bucket fits (the request lands in ``rejected`` —
+        admission control instead of silently truncated output)."""
+        b = self.bucket_for(req)
+        if b is None:
+            log.warning("serve: rejecting request %d (needs %d positions, "
+                        "largest bucket is %d)", req.rid,
+                        len(req.prompt) + req.max_new_tokens,
+                        self.buckets[-1])
+            self.rejected.append(req)
+            return None
+        self.engines[b].submit(req)
+        return b
+
+    # -- serving ---------------------------------------------------------------
+    def run(self, max_steps: int = 10_000, on_step=None) -> List[Request]:
+        """Drain every bucket (smallest first); returns finished requests."""
+        finished: List[Request] = []
+        for b in self.buckets:
+            eng = self.engines[b]
+            if any(eng._slot_req) or eng._queue:
+                finished.extend(eng.run(max_steps=max_steps, on_step=on_step))
+        return finished
+
+    @property
+    def swap_events(self) -> Dict[int, List[Dict[str, Any]]]:
+        """Per-bucket hot-swap history (bucket max_len -> events)."""
+        return {b: list(self.engines[b].swap_events) for b in self.buckets}
+
+    @property
+    def steps_total(self) -> int:
+        return sum(e.steps_total for e in self.engines.values())
+
+    def close(self) -> None:
+        """Close every bucket engine and an engine-owned tuner.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        for eng in self.engines.values():
+            eng.close()
+        if self.tuner is not None and self._owns_tuner:
+            self.tuner.close(wait=False)
+
+    def __enter__(self) -> "BucketedServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

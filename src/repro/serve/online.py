@@ -36,7 +36,7 @@ import queue
 import threading
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
-from ..core.cache import TuningCache, default_cache
+from ..core.cache import TuningCache, default_cache, normalize_objective
 from ..core.failures import EvaluationError
 from ..core.profiles import DeviceProfile, TPU_V5E, get_profile
 from ..core.registry import Resolution, TunableKernel, resolve
@@ -104,13 +104,16 @@ class JobStatus(enum.Enum):
 
 @dataclasses.dataclass
 class TuneJob:
-    """One queued background retune for a (kernel, shape, profile)."""
+    """One queued background retune for a (kernel, shape, profile,
+    objective)."""
 
     kernel: str
     shape: Dict[str, Any]
     profile: str
     #: provenance of the config being served meanwhile (transfer/heuristic)
     provenance: str
+    #: canonical objective spec; None ≡ the default (``median_time``)
+    objective: Optional[str] = None
     status: JobStatus = JobStatus.PENDING
     #: winning config, once DONE
     config: Optional[Dict[str, Any]] = None
@@ -122,9 +125,10 @@ class TuneJob:
         default=None, repr=False)
 
     @property
-    def key(self) -> Tuple[str, str, str]:
+    def key(self) -> Tuple[str, str, str, Optional[str]]:
         k = self.tunable if self.tunable is not None else resolve(self.kernel)
-        return (self.kernel, k.key_for(self.shape), self.profile)
+        return (self.kernel, k.key_for(self.shape), self.profile,
+                self.objective)
 
 
 @dataclasses.dataclass
@@ -140,6 +144,12 @@ class OnlineTuneConfig:
     evaluator_factory: Optional[Callable[..., Any]] = None
     #: EngineConfig / kwargs dict for the EvaluationEngine
     engine: Optional[Any] = None
+    #: tuning objective for background searches (spec string or
+    #: :class:`~repro.core.metrics.Objective`); None = the default
+    #: ``median_time``.  SLO-driven serving passes ``"p99_time"`` here —
+    #: winners then land under objective-scoped cache keys and never
+    #: shadow median-tuned entries.
+    objective: Optional[Any] = None
     #: warm-start neighbour pool handed to tune_kernel (cache.nearest)
     warm_start: "bool | int" = True
     #: persistent compile-artifact store shared with the rest of the fleet
@@ -173,7 +183,7 @@ class BackgroundTuner:
         self.cache = cache if cache is not None else default_cache()
         self.config = config or OnlineTuneConfig()
         self.profile = profile
-        self.jobs: Dict[Tuple[str, str, str], TuneJob] = {}
+        self.jobs: Dict[Tuple[str, str, str, Optional[str]], TuneJob] = {}
         self._queue: "queue.Queue[Optional[TuneJob]]" = queue.Queue()
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
@@ -191,7 +201,9 @@ class BackgroundTuner:
         prof = (profile or self.profile).name
         k = resolve(kernel)
         job = TuneJob(kernel=k.name, shape=dict(shape), profile=prof,
-                      provenance=provenance, tunable=k)
+                      provenance=provenance,
+                      objective=normalize_objective(self.config.objective),
+                      tunable=k)
         key = job.key
         with self._lock:
             if self._closed:
@@ -279,7 +291,8 @@ class BackgroundTuner:
         kwargs: Dict[str, Any] = dict(
             strategy=cfg.strategy, budget=cfg.budget, seed=cfg.seed,
             interpret=cfg.interpret, engine=cfg.engine,
-            warm_start=cfg.warm_start, artifact_store=cfg.artifact_store)
+            warm_start=cfg.warm_start, artifact_store=cfg.artifact_store,
+            objective=cfg.objective)
         if cfg.evaluator_factory is not None:
             kwargs["evaluator"] = cfg.evaluator_factory(k, job.shape, profile)
         try:
@@ -305,11 +318,14 @@ class BackgroundTuner:
         job.config = dict(outcome.best_config)
         job.best_time = outcome.best_time
         job.evaluations = outcome.result.evaluations
-        # record -> cache notification -> every subscribed engine hot-swaps
+        # record -> cache notification -> every subscribed engine hot-swaps;
+        # the outcome's objective (not cfg's raw value) keys the entry, so
+        # the cache field always matches what the search actually optimized
         self.cache.record(k.name, k.key_for(job.shape), job.profile,
                           job.config, outcome.best_time,
                           outcome.result.strategy,
-                          outcome.result.evaluations, shape=job.shape)
+                          outcome.result.evaluations, shape=job.shape,
+                          objective=outcome.objective)
         # merge-on-disk: other replicas retuning into the same file keep
         # their winners (best time per key) — and any better entry found
         # on disk merges back in, firing the same hot-swap subscribers

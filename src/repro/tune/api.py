@@ -37,16 +37,19 @@ log = logging.getLogger("repro.tune")
 def warm_start_seeds(k: TunableKernel, shape: Shape, *,
                      profile: DeviceProfile = TPU_V5E,
                      cache: Optional[TuningCache] = None,
-                     k_nearest: int = 3) -> List[Dict[str, Any]]:
+                     k_nearest: int = 3,
+                     objective: "str | Any | None" = None
+                     ) -> List[Dict[str, Any]]:
     """Warm-start candidates for tuning ``k`` at ``shape``: the configs of
     the ``k_nearest`` closest tuned shapes in the cache (nearest first),
     then the declared heuristic.  Feasibility filtering happens in the
     strategy layer — a block size tuned for another shape may not divide
-    this one."""
+    this one.  Only same-``objective`` winners transfer (a p99 search is
+    never seeded from median winners' keys and vice versa)."""
     cache = cache if cache is not None else default_cache()
     seeds = [dict(e.config)
              for e in cache.nearest(k.name, dict(shape), profile.name,
-                                    k=k_nearest)]
+                                    k=k_nearest, objective=objective)]
     try:
         seeds.append(dict(k.heuristic(dict(shape))))
     except Exception as e:  # noqa: BLE001 — a broken heuristic is no seed
@@ -68,6 +71,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 engine: "EngineConfig | Dict[str, Any] | None" = None,
                 warm_start: "bool | int | None" = None,
                 seeds: Optional[List[Dict[str, Any]]] = None,
+                objective: "str | Any | None" = None,
                 **strategy_kwargs) -> TuningOutcome:
     """Tune one registered kernel for one concrete shape.
 
@@ -93,6 +97,12 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     default.  A second identical search against a warm store performs no
     fresh compiles — every prepare is a store hit
     (``engine_stats["artifact_hits"]``).
+
+    ``objective`` selects what the search minimizes (an
+    :class:`~repro.core.metrics.Objective` or spec string such as
+    ``"p99_time"``; None = the default ``median_time``).  The winner is
+    recorded under an objective-scoped cache key, and warm-start seeds
+    only transfer from same-objective entries.
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -109,7 +119,8 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     all_seeds = list(seeds or [])
     if k_nearest > 0:
         all_seeds += warm_start_seeds(k, shape, profile=profile, cache=cache,
-                                      k_nearest=k_nearest)
+                                      k_nearest=k_nearest,
+                                      objective=objective)
     tuner = Tuner.from_tunable(k, shape, evaluator=evaluator, profile=profile,
                                cache=cache, artifact_store=artifact_store,
                                interpret=interpret,
@@ -117,6 +128,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     return tuner.tune(strategy=strategy, budget=budget, seed=seed,
                       record_to_cache=record, shape_key=k.key_for(shape),
                       engine=engine, seeds=all_seeds or None,
+                      objective=objective,
                       **strategy_kwargs)
 
 
@@ -137,6 +149,7 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
                             warm_start: "bool | int" = True,
                             seed: int = 0,
                             record: bool = True,
+                            objective: "str | Any | None" = None,
                             timeout_s: Optional[float] = None):
     """Tune one kernel for one shape across a worker fleet.
 
@@ -159,7 +172,8 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
         profile=profile, evaluator=evaluator, cache=cache,
         artifact_store=artifact_store, budget=budget,
         engine=engine, interpret=interpret, extended_space=extended_space,
-        warm_start=warm_start, seed=seed, record=record)
+        warm_start=warm_start, seed=seed, record=record,
+        objective=objective)
     return tuner.run(timeout_s=timeout_s)
 
 
@@ -193,7 +207,8 @@ class TuningSession:
                  extended_space: Optional[bool] = None,
                  registry: KernelRegistry = REGISTRY,
                  evaluator_factory=None,
-                 engine: "EngineConfig | Dict[str, Any] | None" = None):
+                 engine: "EngineConfig | Dict[str, Any] | None" = None,
+                 objective: "str | Any | None" = None):
         self.profile = profile
         self.cache = cache if cache is not None else default_cache()
         #: shared compile-artifact store for every queued item (None = the
@@ -209,6 +224,8 @@ class TuningSession:
         self.evaluator_factory = evaluator_factory
         #: engine configuration shared by every queued item
         self.engine = engine
+        #: objective every queued item tunes under (None = median_time)
+        self.objective = objective
         self._items: List[_WorkItem] = []
         self.outcomes: Dict[str, TuningOutcome] = {}
 
@@ -250,7 +267,7 @@ class TuningSession:
             kw: Dict[str, Any] = dict(
                 strategy=self.strategy, budget=self.budget, seed=self.seed,
                 interpret=self.interpret, extended_space=self.extended_space,
-                engine=self.engine)
+                engine=self.engine, objective=self.objective)
             kw.update(item.overrides)
             if "evaluator" not in kw and self.evaluator_factory is not None:
                 kw["evaluator"] = self.evaluator_factory(k, shape, self.profile)
@@ -263,7 +280,8 @@ class TuningSession:
                 self.cache.record(k.name, k.key_for(shape), self.profile.name,
                                   best.config, best.time,
                                   outcome.result.strategy,
-                                  outcome.result.evaluations, shape=shape)
+                                  outcome.result.evaluations, shape=shape,
+                                  objective=outcome.objective)
             log.info("session: %s -> %s", item.key,
                      "no feasible config" if best is None
                      else f"{best.time * 1e6:.1f} us {best.config}")

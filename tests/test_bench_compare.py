@@ -274,3 +274,62 @@ def test_emit_compiles_lands_in_record_json():
     warm, plain = common.end_section()
     assert warm.to_json()["compiles"] == 0
     assert "compiles" not in plain.to_json()
+
+
+# -- p99 tail-latency gate (--p99-threshold) ----------------------------------
+
+def prec(name, us, p99):
+    r = rec(name, us)
+    r["p99_us"] = p99
+    return r
+
+
+def test_p99_growth_is_a_regression(tmp_path, capsys):
+    base = doc(slo=section([prec("bucketed_p99", 1000.0, 1200.0)]))
+    cur = doc(slo=section([prec("bucketed_p99", 1000.0, 2400.0)]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+    assert "tail-latency" in capsys.readouterr().err
+
+
+def test_p99_growth_within_threshold_passes(tmp_path):
+    base = doc(slo=section([prec("bucketed_p99", 1000.0, 1200.0)]))
+    cur = doc(slo=section([prec("bucketed_p99", 1000.0, 1500.0)]))
+    assert run_main(tmp_path, base, cur) == compare.OK
+
+
+def test_p99_threshold_configurable(tmp_path):
+    base = doc(slo=section([prec("bucketed_p99", 1000.0, 1000.0)]))
+    cur = doc(slo=section([prec("bucketed_p99", 1000.0, 1400.0)]))
+    assert run_main(tmp_path, base, cur,
+                    "--p99-threshold", "0.5") == compare.OK
+    assert run_main(tmp_path, base, cur,
+                    "--p99-threshold", "0.25") == compare.REGRESSION
+
+
+def test_p99_improvement_passes(tmp_path):
+    base = doc(slo=section([prec("bucketed_p99", 1000.0, 2400.0)]))
+    cur = doc(slo=section([prec("bucketed_p99", 1000.0, 900.0)]))
+    assert run_main(tmp_path, base, cur) == compare.OK
+
+
+def test_p99_gate_fires_even_when_mean_is_steady(tmp_path):
+    # the gate's reason to exist: us_per_call (the mean) holds, only the
+    # tail blows out — the timing gate alone would pass this
+    base = doc(slo=section([prec("bucketed_p99", 1000.0, 1200.0)]))
+    cur = doc(slo=section([prec("bucketed_p99", 1001.0, 5000.0)]))
+    assert run_main(tmp_path, base, cur) == compare.REGRESSION
+
+
+def test_p99_on_record_new_in_current_ignored(tmp_path):
+    cur = doc(gemm=section([rec("a", 1000.0), rec("b", 200.0),
+                            prec("new", 10.0, 99.0)]))
+    assert run_main(tmp_path, BASE, cur) == compare.OK
+
+
+def test_emit_p99_lands_in_record_json():
+    common.begin_section()
+    common.emit("bucketed_p99", 900.0, "2.4x", p99_us=962.048)
+    common.emit("plain", 2.0)
+    tail, plain = common.end_section()
+    assert tail.to_json()["p99_us"] == 962.048
+    assert "p99_us" not in plain.to_json()

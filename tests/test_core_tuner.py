@@ -77,9 +77,9 @@ def test_analytical_evaluator_deterministic_noise():
     spec = KernelSpec(name="k", build=lambda c: (lambda: None),
                       analytical_model=lambda c, p: 1e-3 * c["x"])
     ev = TPUAnalyticalEvaluator(noise_sigma=0.05, seed=3)
-    m1 = ev.evaluate(spec, {"x": 2})
-    m2 = ev.evaluate(spec, {"x": 2})
-    m3 = ev.evaluate(spec, {"x": 3})
+    m1 = ev._evaluate(spec, {"x": 2})
+    m2 = ev._evaluate(spec, {"x": 2})
+    m3 = ev._evaluate(spec, {"x": 3})
     assert m1.time_s == m2.time_s
     assert m1.time_s != m3.time_s
 
@@ -87,7 +87,7 @@ def test_analytical_evaluator_deterministic_noise():
 def test_analytical_evaluator_infeasible():
     spec = KernelSpec(name="k", build=lambda c: (lambda: None),
                       analytical_model=lambda c, p: math.inf)
-    m = TPUAnalyticalEvaluator().evaluate(spec, {})
+    m = TPUAnalyticalEvaluator()._evaluate(spec, {})
     assert not m.ok and m.time_s == math.inf
 
 
@@ -101,7 +101,7 @@ def test_cost_model_evaluator_roofline_terms():
         name="mm", build=build,
         arg_specs=lambda: (jax.ShapeDtypeStruct((256, 256), jnp.float32),
                            jax.ShapeDtypeStruct((256, 256), jnp.float32)))
-    m = CostModelEvaluator(profile=TPU_V5E).evaluate(spec, {})
+    m = CostModelEvaluator(profile=TPU_V5E)._evaluate(spec, {})
     assert m.ok
     assert m.detail["flops"] >= 2 * 256 ** 3 * 0.9
     assert m.detail["compute_t"] > 0

@@ -479,9 +479,9 @@ def test_nearest_uses_memoized_index_and_invalidates(tmp_path):
                  shape={"M": 128})
     out = cache.nearest("k", {"M": 100}, "p", k=1)
     assert [e.config["x"] for e in out] == [128]
-    bucket = cache._shape_index[("k", "p")]
+    bucket = cache._shape_index[("k", "p", None)]
     cache.nearest("k", {"M": 70}, "p", k=1)
-    assert cache._shape_index[("k", "p")] is bucket  # reused, not rebuilt
+    assert cache._shape_index[("k", "p", None)] is bucket  # reused, not rebuilt
     cache.record("k", "s96", "p", {"x": 96}, 1.0, "full", 1,
                  shape={"M": 96})                    # put invalidates
     assert cache._shape_index is None

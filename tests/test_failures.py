@@ -452,8 +452,8 @@ def test_wallclock_prepare_raises_compile_error():
                       make_args=lambda rng: (1.0,))
     with pytest.raises(CompileError):
         WallClockEvaluator().prepare(spec, {})
-    # the one-call path folds it back into a failed Measurement
-    m = WallClockEvaluator().evaluate(spec, {})
+    # the internal one-call path folds it back into a failed Measurement
+    m = WallClockEvaluator()._evaluate(spec, {})
     assert not m.ok and m.time_s == math.inf and "ValueError" in m.error
 
 
@@ -468,7 +468,7 @@ def test_wallclock_verification_raises_verification_failure():
     prepared = ev.prepare(spec, {})
     with pytest.raises(VerificationFailure):
         ev.measure(spec, {}, prepared)
-    m = ev.evaluate(spec, {})
+    m = ev._evaluate(spec, {})
     assert not m.ok and "verification failed" in m.error
 
 
@@ -479,7 +479,7 @@ def test_analytical_infeasible_raises_typed_error():
                       analytical_model=lambda c, p: math.inf)
     with pytest.raises(InfeasibleConfigError):
         TPUAnalyticalEvaluator().measure(spec, {})
-    m = TPUAnalyticalEvaluator().evaluate(spec, {})
+    m = TPUAnalyticalEvaluator()._evaluate(spec, {})
     assert not m.ok and m.time_s == math.inf
 
 
