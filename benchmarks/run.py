@@ -15,7 +15,7 @@ Env knobs:
   REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
   REPRO_BENCH_ONLY   comma-separated subset
                      (conv,gemm,roofline,wallclock,engine,transfer,online,
-                      dtune,artifacts,slo)
+                      dtune,artifacts,slo,predict)
   REPRO_BENCH_OUT    output directory for BENCH_*.json
 """
 
@@ -69,8 +69,8 @@ def main() -> None:
     only = os.environ.get("REPRO_BENCH_ONLY", "")
     wanted = set(only.split(",")) if only else None
     from . import (bench_artifacts, bench_conv, bench_dtune, bench_engine,
-                   bench_gemm, bench_online, bench_roofline, bench_slo,
-                   bench_transfer, bench_wallclock)
+                   bench_gemm, bench_online, bench_predict, bench_roofline,
+                   bench_slo, bench_transfer, bench_wallclock)
     table = {
         "conv": bench_conv.main,          # paper §V: Figs 4/5/6, Tables II/III
         "gemm": bench_gemm.main,          # paper §VI: Fig 7, Table IV, Fig 9
@@ -82,6 +82,7 @@ def main() -> None:
         "dtune": bench_dtune.main,        # sharded workers + fleet cache merge
         "artifacts": bench_artifacts.main,  # compile-artifact store hit rate
         "slo": bench_slo.main,            # bucketed p99 vs worst-case padding
+        "predict": bench_predict.main,    # learned surrogate vs warm start
     }
     print("name,us_per_call,derived")
     sections: Dict[str, Dict[str, Any]] = {}

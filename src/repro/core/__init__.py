@@ -27,6 +27,10 @@ from .hlo import (CollectiveStats, canonicalize_hlo, collective_stats,
                   count_ops, fingerprint, fusion_stats)
 from .metrics import (DEFAULT_OBJECTIVE, Metrics, Objective,
                       default_objective)
+from .predict import (PREDICTOR_KINDS, CostModelPredictor,
+                      HeuristicPredictor, LearnedPredictor, Predictor,
+                      TransferPredictor, make_predictor, resolve_predictor,
+                      train_from_cache, training_fingerprint)
 from .profiles import (PROFILES, TPU_V3, TPU_V4, TPU_V5E, TPU_V5P,
                        DeviceProfile, get_profile)
 from .registry import (REGISTRY, AutotunePolicy, KernelRegistry, Resolution,
@@ -38,7 +42,7 @@ from .strategies import (AskTellDriver, Evolutionary, FullSearch,
                          RandomSearch, SearchResult, SequentialAskTell,
                          SimulatedAnnealing, Strategy, Trial,
                          available_strategies, make_strategy,
-                         register_strategy, usable_seeds)
+                         project_feasible, register_strategy, usable_seeds)
 from .tuner import Tuner, TuningOutcome
 from .verify import VerificationError, assert_trees_close, trees_close
 
@@ -53,6 +57,9 @@ __all__ = [
     "Measurement", "TPUAnalyticalEvaluator", "WallClockEvaluator",
     "make_evaluator", "median_prune_loop",
     "DEFAULT_OBJECTIVE", "Metrics", "Objective", "default_objective",
+    "PREDICTOR_KINDS", "CostModelPredictor", "HeuristicPredictor",
+    "LearnedPredictor", "Predictor", "TransferPredictor", "make_predictor",
+    "resolve_predictor", "train_from_cache", "training_fingerprint",
     "CompileError", "EvaluationError", "EvaluationTimeout", "FailureRecord",
     "InfeasibleConfigError", "MeasureError", "RetryPolicy", "TransientError",
     "VerificationFailure", "summarize_failures",
@@ -68,8 +75,8 @@ __all__ = [
     "GreedyCoordinateDescent", "ParticleSwarm", "RandomSearch",
     "SearchResult", "SequentialAskTell", "SimulatedAnnealing",
     "Strategy", "Trial",
-    "available_strategies", "make_strategy", "register_strategy",
-    "usable_seeds",
+    "available_strategies", "make_strategy", "project_feasible",
+    "register_strategy", "usable_seeds",
     "Tuner", "TuningOutcome",
     "VerificationError", "assert_trees_close", "trees_close",
 ]

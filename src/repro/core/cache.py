@@ -607,6 +607,38 @@ class TuningCache:
             snapshot = dict(self._data)
         return {k: CacheEntry.from_json(v) for k, v in snapshot.items()}
 
+    def trial_dataset(self, kernel: str,
+                      profile: Optional[str] = None,
+                      objective: "Objective | str | None" = None
+                      ) -> List[Dict[str, Any]]:
+        """Measured-trial rows for training a learned predictor.
+
+        Returns ``[{"shape", "config", "time_s"}, ...]`` from every entry
+        of ``kernel`` that carries a structured shape, a finite time, and
+        matches ``profile`` / ``objective`` (both meaning "any" when
+        None / "this one only" when given — objective identity follows
+        :func:`normalize_objective`, so the default spec matches legacy
+        unscoped entries).  Pre-v2 entries without a shape are skipped:
+        a row without features cannot train anything.
+        """
+        want_obj = normalize_objective(objective)
+        rows: List[Dict[str, Any]] = []
+        for key, entry in sorted(self.entries().items()):
+            fields = split_key(key)
+            if len(fields) < 3 or fields[0] != kernel:
+                continue
+            if profile is not None and fields[2] != profile:
+                continue
+            entry_obj = normalize_objective(entry.objective)
+            if objective is not None and entry_obj != want_obj:
+                continue
+            if not entry.shape or not math.isfinite(entry.time_s):
+                continue
+            rows.append({"shape": dict(entry.shape),
+                         "config": dict(entry.config),
+                         "time_s": float(entry.time_s)})
+        return rows
+
     def record(self, kernel: str, shape_key: str, profile: str,
                config: Dict[str, Any], time_s: float, strategy: str,
                evaluations: int,

@@ -49,6 +49,7 @@ broken.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import os
 import time
@@ -62,6 +63,8 @@ from .failures import (CircuitBreakerTripped, CompileError, FailureRecord,
 from .metrics import Objective, default_objective
 from .space import Config, SearchSpace
 from .strategies import SearchResult, Strategy, Trial, accepts_kwarg
+
+log = logging.getLogger("repro.engine")
 
 
 def _default_workers() -> int:
@@ -111,6 +114,24 @@ class EngineConfig:
     #: when set, else ``median_time`` — the legacy scalar path,
     #: trial-identical to pre-objective behavior)
     objective: "Objective | str | None" = None
+    #: optional :class:`~repro.core.predict.Predictor` instance.  When set,
+    #: every strategy ``ask()`` batch is ranked predictor-first (best
+    #: predicted config compiles/measures first), and — with
+    #: ``predict_prune`` — predicted-infeasible configs are answered
+    #: ``inf`` without compiling.  None (the default) leaves every search
+    #: trial-identical to the predictor-less engine.
+    predictor: Optional[Any] = None
+    #: prune predicted-infeasible configs before compile.  None defers to
+    #: the REPRO_PREDICT_PRUNE env knob (strict bool, default off) when a
+    #: predictor is set, else off
+    predict_prune: Optional[bool] = None
+    #: pruning guard: the top ``predict_survivors`` fraction of each
+    #: ranked batch (at least one config) is never pruned, whatever the
+    #: infeasibility head claims
+    predict_survivors: float = 0.5
+    #: prune a config when the predictor's feasibility probability falls
+    #: below this threshold
+    predict_threshold: float = 0.5
 
     def __post_init__(self):
         if self.workers is None:
@@ -126,6 +147,17 @@ class EngineConfig:
         # set, else median_time) at construction time
         self.objective = (default_objective() if self.objective is None
                           else Objective.coerce(self.objective))
+        if self.predict_prune is None and self.predictor is not None:
+            # pruning is meaningless without a predictor, so the env knob
+            # is only consulted once one is attached — a later
+            # dataclasses.replace(engine, predictor=...) re-runs this and
+            # picks the knob up; until then None stays (falsy = off)
+            from .predict import predict_prune_default
+            self.predict_prune = predict_prune_default()
+        if not (0.0 < self.predict_survivors <= 1.0):
+            raise ValueError("predict_survivors must be in (0, 1]")
+        if not (0.0 <= self.predict_threshold <= 1.0):
+            raise ValueError("predict_threshold must be in [0, 1]")
 
 
 @dataclasses.dataclass
@@ -141,6 +173,9 @@ class EngineStats:
     speculative_compiles: int = 0
     speculative_hits: int = 0       # speculated artifacts later consumed
     pruned: int = 0                 # measurements aborted by early stop
+    predicted_pruned: int = 0       # configs answered inf by the predictor's
+                                    # infeasibility head, never compiled
+    predictor_rank_used: int = 0    # ask() batches reordered by the predictor
     compile_failures: int = 0       # distinct configs failed in prepare
     measure_failures: int = 0       # distinct configs failed in measure
     retries: int = 0                # extra evaluation attempts made
@@ -383,6 +418,61 @@ class EvaluationEngine:
             return math.inf
         return obj.scalarize(m.as_metrics())
 
+    def _predictor_gate(self, batch: List[Config]
+                        ) -> Tuple[List[Config],
+                                   List[Tuple[Config, float]]]:
+        """Rank an ask() batch predictor-first, optionally pruning.
+
+        Returns ``(survivors, pruned_results)``: survivors in predicted-
+        best-first order, and pruned configs as ready ``(config, inf)``
+        tell entries that never reach the compile pool.  The guard keeps
+        the top ``predict_survivors`` fraction (>= 1 config) and every
+        memo-hit config unconditionally, so pruning can only ever drop
+        low-ranked fresh configs.  A predictor failure is logged and the
+        batch passes through untouched — prediction must never break a
+        search.
+        """
+        cfg = self.config
+        pred = cfg.predictor
+        if pred is None or not batch:
+            return batch, []
+        shape = dict(self.spec.meta or {})
+        profile = getattr(self.evaluator, "profile", None)
+        try:
+            scores = list(pred.rank(list(batch), shape, profile))
+            if len(scores) != len(batch):
+                raise ValueError(f"predictor returned {len(scores)} scores "
+                                 f"for {len(batch)} configs")
+        except Exception:  # noqa: BLE001 — predictors are advisory only
+            log.debug("predictor rank failed; batch passes through",
+                      exc_info=True)
+            return batch, []
+        order = sorted(range(len(batch)), key=lambda i: (scores[i], i))
+        ranked = [batch[i] for i in order]
+        self.stats.predictor_rank_used += 1
+        if not cfg.predict_prune or len(ranked) <= 1:
+            return ranked, []
+        keep = max(1, math.ceil(cfg.predict_survivors * len(ranked)))
+        survivors: List[Config] = []
+        pruned: List[Tuple[Config, float]] = []
+        for pos, config in enumerate(ranked):
+            key = self.space.config_key(config)
+            if pos < keep or key in self.measurements:
+                survivors.append(config)
+                continue
+            try:
+                p = float(pred.feasible(config, shape, profile))
+            except Exception:  # noqa: BLE001
+                p = 1.0
+            if p < cfg.predict_threshold:
+                self.stats.predicted_pruned += 1
+                self.stats.evaluations += 1
+                pruned.append((config, math.inf))
+                self._history.append((dict(config), math.inf))
+            else:
+                survivors.append(config)
+        return survivors, pruned
+
     def _attach_failures(self, result: SearchResult) -> None:
         """Give every failed trial its FailureRecord (by config identity)."""
         if not self.failures:
@@ -453,6 +543,9 @@ class EvaluationEngine:
                     break
                 self.stats.batches += 1
                 self.stats.max_batch = max(self.stats.max_batch, len(batch))
+                # 0. predictor-first: rank the batch and (optionally) answer
+                #    predicted-infeasible configs inf without compiling
+                batch, pre_pruned = self._predictor_gate(batch)
                 keys = [self.space.config_key(c) for c in batch]
                 # 1. launch compiles for every fresh config in the batch
                 for config, key in zip(batch, keys):
@@ -463,7 +556,7 @@ class EvaluationEngine:
                 if len(batch) == 1 and keys[0] not in self.measurements:
                     self._speculate(pool, batch[0], in_flight, speculative)
                 # 3. serialized measurement, memo-first, in batch order
-                results = []
+                results = list(pre_pruned)
                 for config, key in zip(batch, keys):
                     failure = None
                     if key in self.measurements:

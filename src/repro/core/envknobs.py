@@ -20,8 +20,9 @@ used ``raw or default``.  This module is the one place those rules live:
   ``choices`` set warns-and-defaults on unknown values.
 
 Knobs parsed through here: ``REPRO_AUTOTUNE``, ``REPRO_ONLINE_TUNE``,
-``REPRO_TUNE_CACHE``, ``REPRO_DTUNE_WORKERS/MODE/DRIVER`` and the
-compile-artifact store's ``REPRO_ARTIFACT_CACHE``/``REPRO_ARTIFACT_DIR``.
+``REPRO_TUNE_CACHE``, ``REPRO_DTUNE_WORKERS/MODE/DRIVER``, the
+compile-artifact store's ``REPRO_ARTIFACT_CACHE``/``REPRO_ARTIFACT_DIR``
+and the prediction layer's ``REPRO_PREDICTOR``/``REPRO_PREDICT_PRUNE``.
 """
 
 from __future__ import annotations

@@ -181,6 +181,11 @@ class Evaluator:
     #: Class-level default so every evaluator has the attribute; the
     #: Tuner attaches a per-run store on the instance.
     artifact_store: Optional[ArtifactStore] = None
+    #: the DeviceProfile this evaluator models/measures against, when it
+    #: has one (cost-model and analytical evaluators set it).  The engine
+    #: reads it (via getattr) to give predictors device context; None
+    #: means "no modeled device" (e.g. wall-clock on the host).
+    profile: Optional[Any] = None
 
     def evaluate(self, spec: KernelSpec, config: Config) -> Measurement:
         """Deprecated one-call path; use ``prepare`` + ``measure``

@@ -48,7 +48,7 @@ from .envknobs import env_str
 from .failures import EvaluationError
 from .profiles import DeviceProfile, TPU_V5E
 from .space import Config, SearchSpace
-from .strategies import accepts_kwarg, usable_seeds
+from .strategies import accepts_kwarg, project_feasible, usable_seeds
 
 log = logging.getLogger("repro.registry")
 
@@ -315,15 +315,28 @@ def _validated_heuristic(k: TunableKernel, shape: Shape) -> Config:
     """The declared heuristic, feasibility-checked against its own space.
 
     A heuristic that violates the space's constraints is a declaration bug
-    (it would never survive a search), but the heuristic is also the
-    universal never-crash fallback — so the violation is *logged*, not
-    raised, and the config is returned regardless.
+    (it would never survive a search) — the violation is *logged*, then
+    the config is projected to the nearest feasible space point (same
+    repair :func:`~repro.core.strategies.project_feasible` applies to
+    transferred seeds), so an out-of-space config is never served.  Only
+    when no feasible point exists (or the space itself is broken) does
+    the raw declared config come back — the heuristic is the universal
+    never-crash fallback.
     """
     cfg = dict(k.heuristic(shape))
     try:
         space = k.make_space(shape)
+    except Exception as e:  # noqa: BLE001 — validation is advisory
+        log.debug("heuristic validation skipped for %s (%s: %s)",
+                  k.name, type(e).__name__, e)
+        return cfg
+    try:
         feasible = space.is_feasible(cfg)
         violated = None if feasible else space.violated(cfg)
+    except KeyError as e:
+        # a constraint references a parameter the heuristic never set —
+        # that *is* a violation (missing value), not a validation error
+        feasible, violated = False, [f"missing parameter {e}"]
     except Exception as e:  # noqa: BLE001 — validation is advisory
         log.debug("heuristic validation skipped for %s (%s: %s)",
                   k.name, type(e).__name__, e)
@@ -332,6 +345,14 @@ def _validated_heuristic(k: TunableKernel, shape: Shape) -> Config:
         log.warning("heuristic config for %s shape=%s violates its own "
                     "space constraints %s: %s", k.name, dict(shape),
                     violated, cfg)
+        try:
+            projected = project_feasible(space, cfg)
+        except Exception:  # noqa: BLE001 — repair is best-effort
+            projected = None
+        if projected is not None:
+            log.warning("heuristic config for %s projected to nearest "
+                        "feasible point: %s", k.name, projected)
+            return projected
     return cfg
 
 
@@ -367,6 +388,42 @@ def transfer_config(k: TunableKernel, shape: Shape, *,
     return None
 
 
+def _predicted_config(k: TunableKernel, shape: Shape, *,
+                      profile: DeviceProfile,
+                      cache: Optional[TuningCache],
+                      predictor: Any
+                      ) -> Optional[Tuple[Config, str]]:
+    """PREDICTED step of the fallback chain: ask the configured predictor
+    for a config, sanitized exactly like a transferred seed.
+
+    Never raises — a broken model must degrade to the heuristic, not take
+    the call site down.  Returns ``(config, predictor_name)`` or None.
+    """
+    from .predict import resolve_predictor   # late: keeps default path lean
+    try:
+        # suggestion + feasibility check run in the kernel's declared
+        # default space — the one registry-served configs execute in
+        extended = bool(k.defaults.get("extended_space", False))
+        pred = resolve_predictor(predictor, k, profile=profile, cache=cache,
+                                 extended=extended)
+        if pred is None:
+            return None
+        suggested = pred.suggest(dict(shape), profile, k=1)
+        if not suggested:
+            return None
+        space = k.make_space(dict(shape), extended=extended)
+        usable = usable_seeds(space, suggested)
+        if not usable:
+            log.info("predicted config for %s rejected (infeasible): %s",
+                     k.name, suggested[0])
+            return None
+        return usable[0], getattr(pred, "name", type(pred).__name__)
+    except Exception as e:  # noqa: BLE001 — prediction is advisory
+        log.warning("predictor failed for %s shape=%s (%s: %s); falling "
+                    "through", k.name, dict(shape), type(e).__name__, e)
+        return None
+
+
 @dataclasses.dataclass(frozen=True)
 class Resolution:
     """A resolved configuration plus *where it came from*.
@@ -377,6 +434,8 @@ class Resolution:
                         migrated from the legacy key format);
     * ``"transfer"``  — borrowed from the nearest tuned shape
                         (``source_shape`` says which);
+    * ``"predicted"`` — suggested by a :mod:`repro.core.predict` predictor
+                        (``predictor`` names which one);
     * ``"tuned"``     — a search ran right now (ON_MISS/ALWAYS) and won;
     * ``"heuristic"`` — the declared static fallback.
 
@@ -394,6 +453,9 @@ class Resolution:
     profile: str
     #: the shape the config was actually tuned for, when transferred
     source_shape: Optional[Dict[str, Any]] = None
+    #: name of the predictor that produced the config (``"predicted"``
+    #: provenance only) — so a bad model is diagnosable from logs alone
+    predictor: Optional[str] = None
 
     @property
     def exact(self) -> bool:
@@ -406,13 +468,20 @@ def lookup_resolved(kernel: "TunableKernel | str", shape: Shape, *,
                     policy: "AutotunePolicy | str | None" = None,
                     registry: Optional[KernelRegistry] = None,
                     transfer: "bool | int | None" = None,
+                    predictor: Any = None,
                     **tune_kwargs) -> Resolution:
     """:func:`lookup`, returning the config *with provenance*.
 
     Resolution order: tuned-cache hit -> (policy permitting) nearest-shape
-    config transfer -> (policy permitting) one-shot tune recorded back into
-    the cache -> the kernel's declared heuristic.  This is the single code
-    path behind every public op's ``config=None`` default.
+    config transfer -> (TRANSFER policy) predictor suggestion -> (policy
+    permitting) one-shot tune recorded back into the cache -> the kernel's
+    declared heuristic.  This is the single code path behind every public
+    op's ``config=None`` default.
+
+    ``predictor`` is anything :func:`repro.core.predict.resolve_predictor`
+    accepts (None = the ``REPRO_PREDICTOR`` env default, a kind string, or
+    an instance); with the default off, resolution is byte-identical to
+    the predictor-less chain.
 
     ``transfer`` sizes the nearest-neighbour pool consulted by the
     ``TRANSFER`` policy and by ``ON_MISS``/``ALWAYS`` warm starting
@@ -427,10 +496,12 @@ def lookup_resolved(kernel: "TunableKernel | str", shape: Shape, *,
     key = k.key_for(shape)
 
     def _res(config: Config, provenance: str,
-             source_shape: Optional[Dict[str, Any]] = None) -> Resolution:
+             source_shape: Optional[Dict[str, Any]] = None,
+             predictor_name: Optional[str] = None) -> Resolution:
         return Resolution(config=config, provenance=provenance,
                           kernel=k.name, shape=dict(shape), key=key,
-                          profile=profile.name, source_shape=source_shape)
+                          profile=profile.name, source_shape=source_shape,
+                          predictor=predictor_name)
 
     # NB: `is` checks — `transfer=1` means k=1, but `1 in (None, True)`
     # would be True under ==
@@ -454,6 +525,12 @@ def lookup_resolved(kernel: "TunableKernel | str", shape: Shape, *,
                          k.name, key, src.shape)
                 return _res(cfg, "transfer",
                             dict(src.shape) if src.shape else None)
+            predicted = _predicted_config(k, shape, profile=profile,
+                                          cache=cache, predictor=predictor)
+            if predicted is not None:
+                cfg, pname = predicted
+                log.info("predicted: %s %s <- %s", k.name, key, pname)
+                return _res(cfg, "predicted", predictor_name=pname)
             return _res(_validated_heuristic(k, shape), "heuristic")
 
     # tune-on-miss / always: run the generic one-shot search, warm-started

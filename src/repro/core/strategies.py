@@ -75,6 +75,49 @@ def usable_seeds(space: SearchSpace, seeds: Optional[Sequence[Config]],
     return out
 
 
+def project_feasible(space: SearchSpace, config: Config,
+                     scan_limit: int = 4096) -> Optional[Config]:
+    """Project an arbitrary config onto the nearest feasible space point.
+
+    Two stages, mirroring what :func:`usable_seeds` checks but *repairing*
+    instead of dropping: each parameter value is first snapped to its
+    nearest in-list value (missing parameter -> first value; numeric ->
+    closest by absolute distance; categorical -> first value); if the
+    snapped point still violates a constraint, the feasible space is
+    scanned (up to ``scan_limit`` points) for the config at minimum
+    index-distance from the snapped one.  Returns ``None`` only when no
+    feasible point exists within the scan horizon.
+    """
+    snapped: Config = {}
+    for p in space.parameters:
+        v = config.get(p.name, p.values[0])
+        try:
+            p.index_of(v)
+        except ValueError:
+            numeric = (isinstance(v, (int, float)) and not isinstance(v, bool))
+            in_list = [x for x in p.values
+                       if isinstance(x, (int, float))
+                       and not isinstance(x, bool)]
+            v = (min(in_list, key=lambda x: (abs(x - v), x))
+                 if numeric and in_list else p.values[0])
+        snapped[p.name] = v
+    try:
+        if space.is_feasible(snapped):
+            return snapped
+    except KeyError:
+        return None
+    want = space.to_indices(snapped)
+    best: Optional[Config] = None
+    best_d = math.inf
+    for cfg in itertools.islice(iter(space), scan_limit):
+        d = sum(abs(i - j) for i, j in zip(space.to_indices(cfg), want))
+        if d < best_d:
+            best, best_d = cfg, d
+            if d == 0:
+                break
+    return best
+
+
 def _sample_avoiding(space: SearchSpace, rng: random.Random, count: int,
                      exclude: Sequence[Config]) -> List[Config]:
     """``sample_unique`` that skips already-seeded configs.

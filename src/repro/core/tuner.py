@@ -65,6 +65,8 @@ class TuningOutcome:
     engine_stats: Optional[Dict[str, Any]] = None
     #: canonical spec of the objective the search minimized
     objective: Optional[str] = None
+    #: name of the predictor that ranked/pruned the search (None = off)
+    predictor: Optional[str] = None
 
     @property
     def best_config(self) -> Optional[Config]:
@@ -124,6 +126,12 @@ class TuningOutcome:
                 f"{s.get('compile_failures', 0)}+"
                 f"{s.get('measure_failures', 0)} compile+measure failures, "
                 f"overlap={s.get('compile_overlap_ratio', 0.0):.0%})")
+            if self.predictor:
+                lines.append(
+                    f"predictor: {self.predictor} "
+                    f"(ranked {s.get('predictor_rank_used', 0)} batches, "
+                    f"pruned {s.get('predicted_pruned', 0)} predicted-"
+                    f"infeasible configs before compile)")
         return "\n".join(lines)
 
 
@@ -194,6 +202,7 @@ class Tuner:
             meta=dict(shape))
         tuner._tunable = k
         tuner._shape = shape
+        tuner._extended_space = bool(extended_space)
         return tuner
 
     # -- CLTune-style declaration ---------------------------------------------
@@ -263,6 +272,7 @@ class Tuner:
              engine: "EngineConfig | Dict[str, Any] | None" = None,
              seeds: Optional[Sequence[Config]] = None,
              objective: "str | Any | None" = None,
+             predictor: Any = None,
              **strategy_kwargs) -> TuningOutcome:
         """Search the space; all evaluation flows through the
         :class:`~repro.core.engine.EvaluationEngine` (``engine`` takes an
@@ -278,7 +288,14 @@ class Tuner:
         (``"p99_time"``) or None for the engine config's objective
         (default ``median_time``).  The resolved objective rides on the
         outcome and is recorded with any cached winner, keyed so winners
-        under different objectives never compare."""
+        under different objectives never compare.
+
+        ``predictor`` is anything
+        :func:`repro.core.predict.resolve_predictor` accepts (None = the
+        ``REPRO_PREDICTOR`` env default, a kind string like
+        ``"learned"``, a ``{"kind", "payload"}`` dict, or an instance);
+        when resolved, the engine ranks every ask() batch predictor-first
+        and may prune predicted-infeasible configs before compile."""
         if self._spec is None:
             raise ValueError("no kernel registered; call add_kernel first")
         if self.space.num_dimensions == 0:
@@ -302,6 +319,22 @@ class Tuner:
             engine = EngineConfig(**(engine or {}))
         if objective is not None:
             engine = dataclasses.replace(engine, objective=objective)
+        if engine.predictor is None:
+            # resolve the predictor= argument (or the REPRO_PREDICTOR env
+            # default) — needs the kernel declaration for spaces/heuristics,
+            # so fluent tuners only accept ready Predictor instances
+            k = getattr(self, "_tunable", None)
+            if k is not None:
+                from .predict import resolve_predictor
+                engine = dataclasses.replace(
+                    engine, predictor=resolve_predictor(
+                        predictor, k, profile=self.profile,
+                        cache=self._cache, objective=engine.objective,
+                        store=self.evaluator.artifact_store,
+                        extended=getattr(self, "_extended_space", False)))
+            elif predictor is not None and not isinstance(predictor,
+                                                          (str, dict)):
+                engine = dataclasses.replace(engine, predictor=predictor)
         eng = EvaluationEngine(self.evaluator, self._spec, self.space,
                                config=engine)
         result = eng.run(strat, budget, seed=seed,
@@ -318,7 +351,9 @@ class Tuner:
             measurements=dict(eng.measurements),
             evaluator=self.evaluator.name, profile=self.profile.name,
             budget=budget, engine_stats=result.extra.get("engine"),
-            objective=resolved_objective.spec)
+            objective=resolved_objective.spec,
+            predictor=(getattr(engine.predictor, "name", None)
+                       if engine.predictor is not None else None))
         if record_to_cache and result.best is not None:
             cache = self._cache if self._cache is not None else default_cache()
             # from_tunable stashes the problem shape in the spec's meta; a

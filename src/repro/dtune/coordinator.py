@@ -133,7 +133,8 @@ class DistributedTuner:
                  warm_start: "bool | int" = True,
                  seed: int = 0,
                  record: bool = True,
-                 objective: "str | Any | None" = None):
+                 objective: "str | Any | None" = None,
+                 predictor: "str | Mapping[str, Any] | None" = None):
         self.kernel = resolve(kernel)
         self.shape = dict(shape)
         self.n_workers = (n_workers if n_workers is not None
@@ -165,6 +166,14 @@ class DistributedTuner:
         if self.engine.get("objective") is not None:
             self.engine["objective"] = str(self.engine["objective"])
         self.objective: Optional[str] = self.engine.get("objective")
+        # same discipline as stop_event: a live Predictor does not pickle
+        # and must not ride the engine kwargs — the coordinator owns the
+        # fleet predictor (trained once, shipped as plain data)
+        if self.engine.get("predictor") is not None:
+            raise ValueError("pass no live predictor in engine=; use "
+                             "DistributedTuner(predictor=...) instead")
+        self.engine.pop("predictor", None)
+        self.predictor = predictor
         self.interpret = interpret
         if extended_space is None:
             extended_space = bool(
@@ -198,6 +207,31 @@ class DistributedTuner:
                                 k_nearest=k_nearest,
                                 objective=self.objective) or None
 
+    # -- fleet predictor ------------------------------------------------------
+    def _predictor_spec(self) -> "str | Dict[str, Any] | None":
+        """The fleet predictor as plain picklable data.
+
+        Kind ``"learned"`` is resolved *here*: one model trains from the
+        coordinator's merged cache (the whole fleet's history) and its
+        weights ship to every worker as a ``{"kind", "payload"}`` dict —
+        workers reconstruct it without retraining, so all shards rank
+        with the same surrogate.  Other kinds travel as strings and are
+        instantiated worker-side (they carry no state).
+        """
+        p = self.predictor
+        if p is None:
+            return None
+        if isinstance(p, Mapping):
+            return dict(p)
+        if p == "learned":
+            from ..core.predict import train_from_cache
+            model = train_from_cache(self.kernel, self.cache,
+                                     profile=self.profile,
+                                     objective=self.objective,
+                                     extended=self.extended_space)
+            return {"kind": "learned", "payload": model.to_payload()}
+        return str(p)
+
     # -- execution ------------------------------------------------------------
     def run(self, timeout_s: Optional[float] = None) -> DistributedOutcome:
         k = self.kernel
@@ -205,6 +239,7 @@ class DistributedTuner:
         shards = shard_space(space, self.n_workers, self.mode,
                              budget=self.budget, seed=self.seed)
         seeds = self._seeds()
+        pspec = self._predictor_spec()
         self._stop = (mp.get_context().Event() if self.driver == "process"
                       else threading.Event())
         workdir = tempfile.mkdtemp(prefix="repro-dtune-")
@@ -219,7 +254,8 @@ class DistributedTuner:
                 extended_space=self.extended_space,
                 cache_path=os.path.join(workdir, f"worker{shard.index}.json"),
                 seeds=seeds,
-                artifact_dir=self.artifact_dir) for shard in shards]
+                artifact_dir=self.artifact_dir,
+                predictor=pspec) for shard in shards]
             results = run_workers(specs, self.driver,
                                   stop_event=self._stop,
                                   timeout_s=timeout_s)

@@ -92,6 +92,12 @@ class WorkerSpec:
     #: on it, and the store's per-artifact cross-process locks make each
     #: distinct artifact compile at most once fleet-wide.  None = no store.
     artifact_dir: Optional[str] = None
+    #: predictor as plain picklable data: None (the REPRO_PREDICTOR env
+    #: default), a kind string, or a ``{"kind", "payload"}`` dict carrying
+    #: a fleet-trained LearnedPredictor's weights — the coordinator trains
+    #: ONE model from the merged cache and ships it to every worker, so
+    #: the whole fleet ranks with the same surrogate (never a live object)
+    predictor: "str | Dict[str, Any] | None" = None
 
 
 @dataclasses.dataclass
@@ -157,7 +163,8 @@ class TuningWorker:
             strategy=shard.strategy, budget=shard.budget, seed=shard.seed,
             record_to_cache=spec.cache_path is not None,
             shape_key=k.key_for(spec.shape), engine=engine,
-            seeds=spec.seeds or None, **shard.strategy_kwargs)
+            seeds=spec.seeds or None, predictor=spec.predictor,
+            **shard.strategy_kwargs)
         result = outcome.result
         best = result.best
         if result.extra.get("aborted"):

@@ -32,9 +32,15 @@ def heuristic_config(Sq: int, Sk: int) -> Dict[str, Any]:
         for c in cands:
             if d % c == 0:
                 return c
+        # no candidate divides d: return d itself — likely out of the
+        # declared value list, which the registry's feasibility projection
+        # (project_feasible) repairs to the nearest in-space point
         return d
+    # PIPELINE_DEPTH is declared explicitly: a heuristic must cover every
+    # space parameter or the constraint check reads it as a violation
     return {"BLOCK_Q": pick(Sq, (512, 256, 128, 64)),
-            "BLOCK_K": pick(Sk, (1024, 512, 256, 128, 64))}
+            "BLOCK_K": pick(Sk, (1024, 512, 256, 128, 64)),
+            "PIPELINE_DEPTH": 2}
 
 
 def tuning_space():

@@ -28,6 +28,9 @@ def shape_key(H: int, W: int, Fh: int, Fw: int) -> str:
 
 
 def heuristic_config(H: int, W: int, Fh: int, Fw: int) -> Dict[str, Any]:
+    # tiny images make min(...) fall outside the declared value lists;
+    # the registry's project_feasible snaps those to the nearest in-space
+    # values before the config is served
     return {"BLOCK_H": min(16, H), "BLOCK_W": min(256, W),
             "SUB_H": 1, "UNROLL": True, "HALO_MODE": "materialize"}
 

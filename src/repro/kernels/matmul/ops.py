@@ -41,6 +41,9 @@ def heuristic_config(M: int, N: int, K: int) -> Dict[str, Any]:
         for c in cands:
             if d % c == 0:
                 return c
+        # nothing divides d (odd/prime dims): return d itself — the
+        # registry's project_feasible repairs out-of-list values to the
+        # nearest in-space point before the config is ever served
         return d
     return {
         "BLOCK_M": pick(M, (512, 256, 128, 64, 32, 16, 8)),

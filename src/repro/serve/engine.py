@@ -201,7 +201,17 @@ class ServeEngine:
         self._seen_generation = self._slot.generation
         #: configs the current/most recent step ran with (slot snapshot)
         self._step_configs = self._slot.read()[0]
-        #: [{"step", "generation", "kernels"}] — when upgrades took effect
+        #: where each kernel's *current* config came from — the resolution
+        #: provenance, with the predictor named for "predicted" (so a bad
+        #: model is diagnosable from the event log alone); hot-swaps
+        #: upgrade the entry to "tuned"
+        self._sources: Dict[str, str] = {
+            name: (f"predicted:{res.predictor}"
+                   if res.provenance == "predicted" and res.predictor
+                   else res.provenance)
+            for name, res in self.kernel_resolutions.items()}
+        #: [{"step", "generation", "kernels", "sources"}] — when upgrades
+        #: took effect, and what produced each swapped config
         self.swap_events: List[Dict[str, Any]] = []
         self._steps_total = 0
         self._closed = False
@@ -304,6 +314,7 @@ class ServeEngine:
         current = self._cache.get(*triple, objective=obj)
         if current is None:
             return
+        self._sources[name] = "tuned"
         gen = self._slot.swap(name, dict(current.config))
         log.info("online: hot-swap %s -> %s (generation %d)",
                  name, dict(current.config), gen)
@@ -368,7 +379,10 @@ class ServeEngine:
                            if self._step_configs.get(n) != c]
                 self.swap_events.append({"step": self._steps_total,
                                          "generation": gen,
-                                         "kernels": changed})
+                                         "kernels": changed,
+                                         "sources": {
+                                             n: self._sources.get(n, "?")
+                                             for n in changed}})
                 log.info("online: step %d now running generation %d "
                          "(changed: %s)", self._steps_total, gen, changed)
                 self._seen_generation = gen

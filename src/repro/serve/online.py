@@ -158,6 +158,13 @@ class OnlineTuneConfig:
     #: retune skips every compile a dtune worker or earlier retune already
     #: paid for, dropping retune-to-swap latency to measure-only.
     artifact_store: Optional[Any] = None
+    #: predictor for background searches — anything
+    #: :func:`repro.core.predict.resolve_predictor` accepts (None = the
+    #: ``REPRO_PREDICTOR`` env default, normally off).  A kind string like
+    #: ``"learned"`` is resolved *once per kernel* against the shared
+    #: cache and reused by every subsequent job, so all retunes rank with
+    #: one model trained from the fleet's merged history.
+    predictor: Optional[Any] = None
     interpret: bool = True
     seed: int = 0
     #: refuse new jobs beyond this many queued-but-unstarted ones
@@ -190,6 +197,9 @@ class BackgroundTuner:
         self._outstanding = 0
         self._closed = False
         self._worker: Optional[threading.Thread] = None
+        # per-kernel resolved predictors: a "learned" kind trains from the
+        # shared cache once, then every job for that kernel reuses it
+        self._predictors: Dict[str, Any] = {}
 
     # -- public API ------------------------------------------------------------
     def submit(self, kernel: "TunableKernel | str",
@@ -282,6 +292,24 @@ class BackgroundTuner:
                     if self._outstanding == 0:
                         self._idle.notify_all()
 
+    def _predictor_for(self, k, profile: DeviceProfile):
+        """Resolve the configured predictor once per kernel and memoize it,
+        so every background job shares one model trained from the cache."""
+        if self.config.predictor is None:
+            return None
+        if k.name not in self._predictors:
+            from ..core.predict import resolve_predictor
+            try:
+                self._predictors[k.name] = resolve_predictor(
+                    self.config.predictor, k, profile=profile,
+                    cache=self.cache, objective=self.config.objective,
+                    extended=bool(k.defaults.get("extended_space", False)))
+            except Exception:  # noqa: BLE001 — prediction is advisory
+                log.warning("online: predictor resolution failed for %s; "
+                            "tuning without one", k.name, exc_info=True)
+                self._predictors[k.name] = None
+        return self._predictors[k.name]
+
     def _run_job(self, job: TuneJob) -> None:
         from ..tune.api import tune_kernel    # late: tune layers above serve
         job.status = JobStatus.RUNNING
@@ -292,7 +320,8 @@ class BackgroundTuner:
             strategy=cfg.strategy, budget=cfg.budget, seed=cfg.seed,
             interpret=cfg.interpret, engine=cfg.engine,
             warm_start=cfg.warm_start, artifact_store=cfg.artifact_store,
-            objective=cfg.objective)
+            objective=cfg.objective,
+            predictor=self._predictor_for(k, profile))
         if cfg.evaluator_factory is not None:
             kwargs["evaluator"] = cfg.evaluator_factory(k, job.shape, profile)
         try:

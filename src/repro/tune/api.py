@@ -72,6 +72,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 warm_start: "bool | int | None" = None,
                 seeds: Optional[List[Dict[str, Any]]] = None,
                 objective: "str | Any | None" = None,
+                predictor: Any = None,
                 **strategy_kwargs) -> TuningOutcome:
     """Tune one registered kernel for one concrete shape.
 
@@ -103,6 +104,13 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     ``"p99_time"``; None = the default ``median_time``).  The winner is
     recorded under an objective-scoped cache key, and warm-start seeds
     only transfer from same-objective entries.
+
+    ``predictor`` ranks the search predictor-first (and can prune
+    predicted-infeasible configs before compile): anything
+    :func:`repro.core.predict.resolve_predictor` accepts — None (= the
+    ``REPRO_PREDICTOR`` env default, normally off), a kind string
+    (``"heuristic"|"costmodel"|"transfer"|"learned"``), a
+    ``{"kind", "payload"}`` dict, or a ready instance.
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -128,7 +136,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     return tuner.tune(strategy=strategy, budget=budget, seed=seed,
                       record_to_cache=record, shape_key=k.key_for(shape),
                       engine=engine, seeds=all_seeds or None,
-                      objective=objective,
+                      objective=objective, predictor=predictor,
                       **strategy_kwargs)
 
 
@@ -150,6 +158,7 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
                             seed: int = 0,
                             record: bool = True,
                             objective: "str | Any | None" = None,
+                            predictor: Any = None,
                             timeout_s: Optional[float] = None):
     """Tune one kernel for one shape across a worker fleet.
 
@@ -173,7 +182,7 @@ def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,
         artifact_store=artifact_store, budget=budget,
         engine=engine, interpret=interpret, extended_space=extended_space,
         warm_start=warm_start, seed=seed, record=record,
-        objective=objective)
+        objective=objective, predictor=predictor)
     return tuner.run(timeout_s=timeout_s)
 
 
@@ -208,7 +217,8 @@ class TuningSession:
                  registry: KernelRegistry = REGISTRY,
                  evaluator_factory=None,
                  engine: "EngineConfig | Dict[str, Any] | None" = None,
-                 objective: "str | Any | None" = None):
+                 objective: "str | Any | None" = None,
+                 predictor: Any = None):
         self.profile = profile
         self.cache = cache if cache is not None else default_cache()
         #: shared compile-artifact store for every queued item (None = the
@@ -226,6 +236,9 @@ class TuningSession:
         self.engine = engine
         #: objective every queued item tunes under (None = median_time)
         self.objective = objective
+        #: predictor shared by every queued item (see tune_kernel; per-item
+        #: ``predictor=`` overrides win)
+        self.predictor = predictor
         self._items: List[_WorkItem] = []
         self.outcomes: Dict[str, TuningOutcome] = {}
 
@@ -267,7 +280,8 @@ class TuningSession:
             kw: Dict[str, Any] = dict(
                 strategy=self.strategy, budget=self.budget, seed=self.seed,
                 interpret=self.interpret, extended_space=self.extended_space,
-                engine=self.engine, objective=self.objective)
+                engine=self.engine, objective=self.objective,
+                predictor=self.predictor)
             kw.update(item.overrides)
             if "evaluator" not in kw and self.evaluator_factory is not None:
                 kw["evaluator"] = self.evaluator_factory(k, shape, self.profile)
@@ -319,7 +333,8 @@ class TuningSession:
         """Aggregate engine counters across every tuned item."""
         totals = {"evaluations": 0, "unique_configs": 0, "memo_hits": 0,
                   "artifact_hits": 0, "compile_calls": 0, "pruned": 0,
-                  "compile_failures": 0, "measure_failures": 0, "retries": 0}
+                  "predicted_pruned": 0, "compile_failures": 0,
+                  "measure_failures": 0, "retries": 0}
         for outcome in self.outcomes.values():
             s = outcome.engine_stats or {}
             for key in totals:

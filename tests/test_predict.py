@@ -1,0 +1,378 @@
+"""Prediction layer: the Predictor protocol and its adapters, the learned
+performance-model surrogate (pretrain on analytical pseudo-labels, finetune
+on measured trials), engine rank/prune integration, the PREDICTED step in
+the registry fallback chain, ArtifactStore persistence keyed by the
+training-set fingerprint, and the REPRO_PREDICTOR / REPRO_PREDICT_PRUNE
+env knobs."""
+
+import dataclasses
+import logging
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ArtifactStore, EngineConfig, SearchSpace,
+                        TuningCache, lookup_resolved, tunable)
+from repro.core.predict import (PREDICTOR_KINDS, CostModelPredictor,
+                                HeuristicPredictor, LearnedPredictor,
+                                Predictor, TransferPredictor,
+                                default_predictor_kind, make_predictor,
+                                predict_prune_default, resolve_predictor,
+                                train_from_cache, training_fingerprint)
+from repro.core.profiles import TPU_V5E
+from repro.tune import tune_kernel
+
+# -- fixtures ----------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _clear_predictor_env(monkeypatch):
+    """Keep every test deterministic against ambient REPRO_* knobs."""
+    monkeypatch.delenv("REPRO_PREDICTOR", raising=False)
+    monkeypatch.delenv("REPRO_PREDICT_PRUNE", raising=False)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return TuningCache(str(tmp_path / "cache.json"))
+
+
+def _toy_kernel(name="ptoy", values=(1, 2, 4, 8)):
+    """time = 1/X over X values constrained to divide shape["N"]."""
+
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="X", values=values)
+        sp.add_constraint(lambda x: shape["N"] % x == 0, ("X",), "N % X")
+        return sp
+
+    @tunable(name=name, space=space, heuristic=lambda s: {"X": 1},
+             analytical_model=lambda s, cfg, prof: 1.0 / cfg["X"],
+             register=False)
+    def build(shape, config):
+        return lambda: config["X"]
+
+    return build
+
+
+def _cliff_kernel(name="pcliff", values=(1, 2, 4, 8, 16), cliff=8):
+    """time = 1/X, but X > cliff is analytically infeasible (inf)."""
+
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="X", values=values)
+        return sp
+
+    def model(s, cfg, prof):
+        return math.inf if cfg["X"] > cliff else 1.0 / cfg["X"]
+
+    @tunable(name=name, space=space, heuristic=lambda s: {"X": 1},
+             analytical_model=model, register=False)
+    def build(shape, config):
+        return lambda: config["X"]
+
+    return build
+
+
+# -- protocol and adapters ---------------------------------------------------
+
+def test_adapters_satisfy_protocol(cache):
+    k = _toy_kernel()
+    learned = LearnedPredictor(k)
+    for p in (HeuristicPredictor(k), CostModelPredictor(k),
+              TransferPredictor(k, cache), learned):
+        assert isinstance(p, Predictor)
+        assert p.name.endswith(f":{k.name}")
+
+
+def test_heuristic_predictor_anchor_rank_suggest():
+    k = _toy_kernel()
+    pred = HeuristicPredictor(k)
+    shape = {"N": 8}
+    assert pred.suggest(shape, None) == [{"X": 1}]
+    # index-distance from the heuristic's pick: X=1 scores 0, X=8 three steps
+    scores = pred.rank([{"X": 1}, {"X": 2}, {"X": 8}], shape, None)
+    assert scores == [0.0, 1.0, 3.0]
+    assert pred.feasible({"X": 8}, shape, None) == 1.0
+    assert pred.feasible({"X": 8}, {"N": 12}, None) == 0.0   # 12 % 8 != 0
+    assert pred.feasible({}, shape, None) == 0.0             # missing param
+
+
+def test_costmodel_predictor_matches_analytical_order():
+    k = _cliff_kernel()
+    pred = CostModelPredictor(k)
+    shape = {"N": 16}
+    scores = pred.rank([{"X": 1}, {"X": 8}, {"X": 16}], shape, None)
+    assert scores[1] < scores[0]                 # 1/8 beats 1/1
+    assert math.isinf(scores[2])                 # beyond the cliff
+    # suggest never proposes a predicted-infeasible config
+    assert pred.suggest(shape, None, k=2) == [{"X": 8}, {"X": 4}]
+    assert pred.feasible({"X": 8}, shape, None) == 1.0
+    assert pred.feasible({"X": 16}, shape, None) == 0.0
+
+
+def test_costmodel_predictor_requires_model():
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="X", values=(1, 2))
+        return sp
+
+    @tunable(name="nomodel", space=space, heuristic=lambda s: {"X": 1},
+             register=False)
+    def build(shape, config):
+        return lambda: 0
+
+    with pytest.raises(ValueError, match="analytical_model"):
+        CostModelPredictor(build)
+
+
+def test_transfer_predictor_pools_nearest_winners(cache):
+    k = _toy_kernel()
+    cache.record(k.name, k.key_for({"N": 16}), "tpu_v5e", {"X": 8},
+                 1e-3, "full", 4, shape={"N": 16})
+    pred = TransferPredictor(k, cache)
+    assert pred.suggest({"N": 32}, None, k=2) == [{"X": 8}]
+    scores = pred.rank([{"X": 8}, {"X": 4}], {"N": 32}, None)
+    assert scores[0] < scores[1]                 # pooled config ranks first
+    # the pooled winner is dropped where it is infeasible
+    assert pred.suggest({"N": 12}, None) == []   # 12 % 8 != 0
+
+
+# -- learned surrogate -------------------------------------------------------
+
+def test_learned_pretrain_learns_analytical_order():
+    k = _toy_kernel()
+    model = LearnedPredictor(k)
+    assert not model.trained
+    assert model.rank([{"X": 1}], {"N": 8}, None) == [0.0]   # neutral untrained
+    added = model.pretrain([{"N": 8}, {"N": 16}], limit=8)
+    assert added == 8 and model.trained
+    shape = {"N": 8}
+    assert (model.predict_time({"X": 8}, shape)
+            < model.predict_time({"X": 1}, shape))
+    assert model.suggest(shape, None, k=1) == [{"X": 8}]
+    scores = model.rank([{"X": 1}, {"X": 8}], shape, None)
+    assert scores[1] < scores[0]
+
+
+def test_finetune_on_measured_beats_pseudo_labels_alone():
+    """Measured truth = 100/X (a systematic shift off the 1/X pseudo-labels);
+    folding weighted measured rows must cut held-out log-space error."""
+    k = _toy_kernel()
+    shapes = [{"N": 8}, {"N": 16}]
+    measured = [{"shape": {"N": n}, "config": {"X": x}, "time_s": 100.0 / x}
+                for n in (8, 16) for x in (1, 2, 4, 8)]
+
+    pre_only = LearnedPredictor(k)
+    pre_only.pretrain(shapes, limit=8)
+    tuned = LearnedPredictor(k)
+    tuned.pretrain(shapes, limit=8)
+    assert tuned.finetune(measured) == len(measured)
+
+    heldout = [({"N": 32}, {"X": x}, 100.0 / x) for x in (1, 2, 4, 8)]
+
+    def err(m):
+        return sum((math.log(m.predict_time(c, s)) - math.log(t)) ** 2
+                   for s, c, t in heldout)
+
+    assert err(tuned) < err(pre_only)
+
+
+def test_learned_infeasibility_head_orders_by_risk():
+    k = _cliff_kernel()
+    model = LearnedPredictor(k)
+    model.pretrain([{"N": 16}], limit=8)         # sees the X=16 inf row
+    shape = {"N": 16}
+    assert model.feasible({"X": 16}, shape, None) < model.feasible(
+        {"X": 1}, shape, None)
+
+
+def test_training_fingerprint_order_insensitive():
+    a = {"shape": {"N": 8}, "config": {"X": 1}, "time_s": 1.0}
+    b = {"shape": {"N": 8}, "config": {"X": 2}, "time_s": 0.5}
+    assert training_fingerprint([a, b]) == training_fingerprint([b, a])
+    assert training_fingerprint([a]) != training_fingerprint([a, b])
+
+
+# -- engine integration ------------------------------------------------------
+
+def test_predictor_off_is_trial_identical(cache):
+    k = _toy_kernel()
+    kw = dict(strategy="annealing", budget=6, cache=cache, record=False,
+              seed=3, warm_start=False)
+    base = tune_kernel(k, {"N": 16}, **kw)
+    off = tune_kernel(k, {"N": 16}, predictor="off", **kw)
+
+    def trials(o):
+        return [(t.config, t.time) for t in o.result.trials]
+
+    assert trials(base) == trials(off)
+    for out in (base, off):
+        assert out.predictor is None
+        assert out.engine_stats["predictor_rank_used"] == 0
+        assert out.engine_stats["predicted_pruned"] == 0
+
+
+def test_engine_ranks_batches_predictor_first(cache):
+    k = _toy_kernel()
+    out = tune_kernel(k, {"N": 8}, strategy="full", cache=cache,
+                      record=False, predictor=CostModelPredictor(k))
+    assert out.predictor == f"costmodel:{k.name}"
+    assert out.engine_stats["predictor_rank_used"] >= 1
+    # full search is one 4-config ask() batch: predicted-best compiles first
+    assert out.result.trials[0].config == {"X": 8}
+    assert out.best_config == {"X": 8}
+
+
+def test_prune_answers_predicted_infeasible_without_winner_loss(cache):
+    k = _cliff_kernel()
+    out = tune_kernel(k, {"N": 16}, strategy="full", cache=cache,
+                      record=False, predictor=CostModelPredictor(k),
+                      engine={"predict_prune": True,
+                              "predict_survivors": 0.4})
+    st = out.engine_stats
+    assert st["predictor_rank_used"] >= 1
+    assert st["predicted_pruned"] == 1           # exactly the X=16 cliff
+    # the pruned config was answered inf, never compiled or measured
+    pruned = [t for t in out.result.trials if t.config == {"X": 16}]
+    assert pruned and not any(t.ok for t in pruned)
+    # the true winner survived the gate and won
+    assert out.best_config == {"X": 8}
+    assert out.best_time == pytest.approx(1.0 / 8, rel=0.05)
+
+
+def test_learned_model_never_prunes_seeded_winner(cache):
+    k = _cliff_kernel()
+    model = LearnedPredictor(k)
+    model.pretrain([{"N": 16}], limit=8)
+    out = tune_kernel(k, {"N": 16}, strategy="full", cache=cache,
+                      record=False, predictor=model,
+                      engine={"predict_prune": True,
+                              "predict_survivors": 0.4})
+    assert out.predictor == f"learned:{k.name}"
+    assert out.best_config == {"X": 8}           # winner always measured
+    assert out.best_time == pytest.approx(1.0 / 8, rel=0.05)
+
+
+def test_engine_config_prune_knob_deferred_until_predictor(monkeypatch):
+    k = _toy_kernel()
+    monkeypatch.setenv("REPRO_PREDICT_PRUNE", "1")
+    cfg = EngineConfig()
+    # no predictor: the env knob stays unresolved (None is falsy in the gate)
+    assert cfg.predict_prune is None
+    cfg2 = dataclasses.replace(cfg, predictor=CostModelPredictor(k))
+    assert cfg2.predict_prune is True
+    monkeypatch.delenv("REPRO_PREDICT_PRUNE")
+    assert EngineConfig(predictor=CostModelPredictor(k)).predict_prune is False
+    with pytest.raises(ValueError, match="predict_survivors"):
+        EngineConfig(predict_survivors=0.0)
+    with pytest.raises(ValueError, match="predict_threshold"):
+        EngineConfig(predict_threshold=1.5)
+
+
+# -- registry fallback chain -------------------------------------------------
+
+def test_lookup_resolved_predicted_provenance(cache):
+    k = _cliff_kernel()
+    res = lookup_resolved(k, {"N": 16}, cache=cache, policy="transfer",
+                          predictor=CostModelPredictor(k))
+    assert res.provenance == "predicted"
+    assert res.predictor == f"costmodel:{k.name}"
+    assert res.config == {"X": 8}                # best finite analytical time
+    # predictor off (the default): the chain falls through to the heuristic
+    res2 = lookup_resolved(k, {"N": 16}, cache=cache, policy="transfer")
+    assert res2.provenance == "heuristic" and res2.predictor is None
+    # an exact tuned entry always outranks prediction
+    cache.record(k.name, k.key_for({"N": 16}), "tpu_v5e", {"X": 4},
+                 1e-3, "full", 4, shape={"N": 16})
+    res3 = lookup_resolved(k, {"N": 16}, cache=cache, policy="transfer",
+                           predictor=CostModelPredictor(k))
+    assert res3.provenance == "exact" and res3.config == {"X": 4}
+
+
+# -- persistence (ArtifactStore) ---------------------------------------------
+
+def test_train_from_cache_roundtrip_and_stale_invalidation(tmp_path, cache):
+    k = _toy_kernel()
+    tune_kernel(k, {"N": 8}, strategy="full", cache=cache, record=True)
+    store = ArtifactStore(str(tmp_path / "store"))
+
+    m1 = train_from_cache(k, cache, store=store)
+    assert m1.trained and m1._rows               # freshly fit + persisted
+    m2 = train_from_cache(k, cache, store=store)
+    # loaded from the store, not retrained: weights match, no raw rows
+    assert m2.trained and not m2._rows and not m2._measured
+    assert np.allclose(m2._theta, m1._theta)
+    assert m2.training_fingerprint == m1.training_fingerprint
+
+    # probing with a different training-set digest misses (stale model)
+    assert LearnedPredictor.load_from_store(
+        store, k, fingerprint="0" * 32) is None
+    # growing the cache changes the dataset fingerprint -> retrain, not load
+    tune_kernel(k, {"N": 16}, strategy="full", cache=cache, record=True)
+    m3 = train_from_cache(k, cache, store=store)
+    assert m3._rows and m3.training_fingerprint != m1.training_fingerprint
+
+
+def test_payload_roundtrip_preserves_predictions():
+    k = _toy_kernel()
+    model = LearnedPredictor(k)
+    model.pretrain([{"N": 8}], limit=8)
+    clone = LearnedPredictor.from_payload(k, model.to_payload())
+    shape = {"N": 8}
+    for x in (1, 2, 4, 8):
+        assert clone.predict_time({"X": x}, shape) == pytest.approx(
+            model.predict_time({"X": x}, shape))
+    assert clone.artifact_fingerprint() == model.artifact_fingerprint()
+
+
+# -- construction / env knobs ------------------------------------------------
+
+def test_resolve_predictor_forms(cache):
+    k = _toy_kernel()
+    assert resolve_predictor(None, k) is None            # env default = off
+    assert isinstance(resolve_predictor("costmodel", k), CostModelPredictor)
+    assert isinstance(resolve_predictor("heuristic", k), HeuristicPredictor)
+    inst = HeuristicPredictor(k)
+    assert resolve_predictor(inst, k) is inst            # instance passthrough
+    with pytest.raises(ValueError, match="unknown predictor kind"):
+        make_predictor("bogus", k)
+    # the dtune wire format: a plain {"kind", "payload"} dict
+    model = LearnedPredictor(k)
+    model.pretrain([{"N": 8}], limit=8)
+    wired = resolve_predictor({"kind": "learned",
+                               "payload": model.to_payload()}, k)
+    assert isinstance(wired, LearnedPredictor) and wired.trained
+    assert np.allclose(wired._theta, model._theta)
+
+
+def test_env_predictor_kind_warns_and_defaults(monkeypatch, caplog):
+    monkeypatch.setenv("REPRO_PREDICTOR", "bogus")
+    with caplog.at_level(logging.WARNING, logger="repro.envknobs"):
+        assert default_predictor_kind() == "off"
+    assert any("REPRO_PREDICTOR" in r.message for r in caplog.records)
+    for kind in PREDICTOR_KINDS:
+        monkeypatch.setenv("REPRO_PREDICTOR", kind)
+        assert default_predictor_kind() == kind
+
+
+def test_env_prune_is_strict_bool(monkeypatch):
+    monkeypatch.setenv("REPRO_PREDICT_PRUNE", "yes")
+    assert predict_prune_default() is True
+    monkeypatch.setenv("REPRO_PREDICT_PRUNE", "off")
+    assert predict_prune_default() is False
+    # the PR 5 truthy-coercion rule: a non-canonical spelling must raise,
+    # never silently pick a side of the feature flag
+    monkeypatch.setenv("REPRO_PREDICT_PRUNE", "2")
+    with pytest.raises(TypeError, match="REPRO_PREDICT_PRUNE"):
+        predict_prune_default()
+
+
+def test_env_predictor_drives_tune_kernel(monkeypatch, cache):
+    k = _toy_kernel()
+    monkeypatch.setenv("REPRO_PREDICTOR", "costmodel")
+    out = tune_kernel(k, {"N": 8}, strategy="full", cache=cache,
+                      record=False)
+    assert out.predictor == f"costmodel:{k.name}"
+    assert out.engine_stats["predictor_rank_used"] >= 1

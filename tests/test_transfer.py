@@ -277,8 +277,13 @@ def test_off_policy_logs_infeasible_heuristic(cache, caplog):
 
     with caplog.at_level(logging.WARNING, logger="repro.registry"):
         cfg = lookup(badheur, {"N": 8}, cache=cache, policy="off")
-    assert cfg == {"A": 1, "B": 10}            # still returned, but...
+    # the violation is logged AND the config is projected to the nearest
+    # feasible point (A=2 is one value-step from the declared A=1) — an
+    # out-of-space config is never served
+    assert cfg == {"A": 2, "B": 10}
     assert any("violates its own space constraints" in r.message
+               for r in caplog.records)
+    assert any("projected to nearest feasible" in r.message
                for r in caplog.records)
 
 
