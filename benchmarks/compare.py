@@ -38,7 +38,11 @@ Growth beyond ``--compiles-threshold`` (relative, default 0.25) versus
 the baseline is a regression, and a baseline of **0** is exact: any
 fresh compile in a search the baseline shows to be compile-free means
 the persistent artifact store stopped deduplicating — the very property
-``repro.core.artifacts`` exists to provide.
+``repro.core.artifacts`` exists to provide.  The analyze section's
+``proven_pruned`` savings land under this same gate: its
+``proven_prune`` record carries the with-checker ``compiles`` count, so
+a static proof that stops firing (compiles creeping back toward the
+unpruned 96) shows up as compile growth against the baseline.
 
 Records may also carry a ``p99_us`` tail-latency figure (the slo
 section's per-step p99).  Growth beyond ``--p99-threshold`` (relative,

@@ -15,7 +15,7 @@ Env knobs:
   REPRO_BENCH_RUNS   statistical runs per strategy (paper: 128; default 16)
   REPRO_BENCH_ONLY   comma-separated subset
                      (conv,gemm,roofline,wallclock,engine,transfer,online,
-                      dtune,artifacts,slo,predict)
+                      dtune,artifacts,slo,predict,analyze)
   REPRO_BENCH_OUT    output directory for BENCH_*.json
 """
 
@@ -68,9 +68,10 @@ def write_payload(name: str, payload: Dict[str, Any]) -> str:
 def main() -> None:
     only = os.environ.get("REPRO_BENCH_ONLY", "")
     wanted = set(only.split(",")) if only else None
-    from . import (bench_artifacts, bench_conv, bench_dtune, bench_engine,
-                   bench_gemm, bench_online, bench_predict, bench_roofline,
-                   bench_slo, bench_transfer, bench_wallclock)
+    from . import (bench_analyze, bench_artifacts, bench_conv, bench_dtune,
+                   bench_engine, bench_gemm, bench_online, bench_predict,
+                   bench_roofline, bench_slo, bench_transfer,
+                   bench_wallclock)
     table = {
         "conv": bench_conv.main,          # paper §V: Figs 4/5/6, Tables II/III
         "gemm": bench_gemm.main,          # paper §VI: Fig 7, Table IV, Fig 9
@@ -83,6 +84,7 @@ def main() -> None:
         "artifacts": bench_artifacts.main,  # compile-artifact store hit rate
         "slo": bench_slo.main,            # bucketed p99 vs worst-case padding
         "predict": bench_predict.main,    # learned surrogate vs warm start
+        "analyze": bench_analyze.main,    # static proofs: prune + registry lint
     }
     print("name,us_per_call,derived")
     sections: Dict[str, Dict[str, Any]] = {}

@@ -1,0 +1,61 @@
+"""repro.analyze — static search-space & declaration analysis.
+
+CLTune §III-A auto-imposes device limits as search-space constraints;
+this package is that idea grown into a static-analysis pass over the
+whole `@tunable` layer:
+
+* :mod:`~repro.analyze.space_audit` — satisfiability, dead values,
+  constraint health (exact below a cardinality bound, stratified above
+  it, with an explicit ``exact|probabilistic`` confidence verdict);
+* :mod:`~repro.analyze.resource` — the declared ``vmem_footprint``
+  model evaluated against ``DeviceProfile`` budgets: **proven**
+  infeasibility the engine answers without compiling
+  (``EngineStats.proven_pruned``) and the lookup chain refuses to
+  transfer;
+* :mod:`~repro.analyze.lint` — registry-wide declaration rules, each a
+  typed :class:`Finding` with a stable ``rule_id``;
+* ``python -m repro.analyze`` — the CLI/CI entry point.
+
+Env knobs (see :mod:`repro.core.envknobs` conventions):
+
+* ``REPRO_ANALYZE`` — default for ``Tuner.tune(analyze=...)`` /
+  ``tune_kernel(analyze=...)`` when the caller passes nothing
+  (default off; non-boolean values raise).
+* ``REPRO_ANALYZE_STRICT`` — when analysis runs pre-search, raise on
+  error-severity findings instead of tuning anyway (default off).
+"""
+
+from __future__ import annotations
+
+from ..core.envknobs import env_bool
+from .findings import SEVERITIES, AnalysisReport, Finding
+from .lint import (analyze_registry, constraint_arity_error, kernel_findings,
+                   render_text)
+from .resource import (alignment_findings, device_constraints,
+                       dtype_bytes, footprint_bytes,
+                       install_device_constraints, proven_checker,
+                       proven_violations, resource_findings)
+from .space_audit import (DEFAULT_EXACT_LIMIT, DEFAULT_SAMPLES, SpaceReport,
+                          audit_space, space_findings)
+
+
+def analyze_default() -> bool:
+    """Session default for ``analyze=`` knobs (``REPRO_ANALYZE``)."""
+    return env_bool("REPRO_ANALYZE", False)
+
+
+def strict_default() -> bool:
+    """Whether pre-search analysis raises on errors
+    (``REPRO_ANALYZE_STRICT``)."""
+    return env_bool("REPRO_ANALYZE_STRICT", False)
+
+
+__all__ = [
+    "AnalysisReport", "Finding", "SEVERITIES", "SpaceReport",
+    "alignment_findings", "analyze_default", "analyze_registry",
+    "audit_space", "constraint_arity_error", "device_constraints",
+    "dtype_bytes", "footprint_bytes", "install_device_constraints",
+    "kernel_findings", "proven_checker", "proven_violations",
+    "render_text", "resource_findings", "space_findings",
+    "strict_default", "DEFAULT_EXACT_LIMIT", "DEFAULT_SAMPLES",
+]

@@ -1,0 +1,210 @@
+"""Static resource checker: CLTune §III-A device limits, proven offline.
+
+The paper queries the device for its limits (max workgroup size, local
+memory bytes) and auto-imposes them as search-space constraints so
+illegal configs are never launched.  The TPU analogue: a kernel's
+declared ``vmem_footprint(shape, config) -> bytes`` model evaluated
+against ``DeviceProfile.vmem_bytes``.  A config whose declared
+footprint exceeds the device budget is **proven infeasible** — the
+engine can answer it as an ``inf`` trial without compiling, the lookup
+chain can refuse to transfer it, and no survivor-fraction hedge is
+needed (unlike PR 9's *predicted* pruning, a proof cannot be wrong
+about more than the declaration itself).
+
+MXU-tile and VPU-sublane alignment are checked too, but only as
+advisory findings: a misaligned block is slow (padding), not illegal,
+so making it a hard constraint would change search winners.
+"""
+
+from __future__ import annotations
+
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Mapping,
+                    Optional, Tuple)
+
+from ..core.profiles import DeviceProfile
+from ..core.space import SearchSpace
+from .findings import Finding
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from ..core.registry import TunableKernel
+
+Shape = Mapping[str, Any]
+Config = Mapping[str, Any]
+#: a proven checker maps a config to the list of violated limits
+ProvenChecker = Callable[[Config], List[str]]
+
+_DTYPE_BYTES = {"float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2,
+                "float16": 2, "f16": 2, "int8": 1, "fp8": 1,
+                "float64": 8, "f64": 8}
+
+
+def dtype_bytes(shape: Shape, default: int = 4) -> int:
+    """Element width implied by a shape dict's ``dtype`` entry."""
+    name = str(shape.get("dtype", "")).lower()
+    return _DTYPE_BYTES.get(name, default)
+
+
+def footprint_bytes(kernel: "TunableKernel", shape: Shape,
+                    config: Config) -> Optional[int]:
+    """Declared VMEM footprint of ``config`` at ``shape``, or ``None``
+    when the kernel declares no model (no proof possible)."""
+    if kernel.vmem_footprint is None:
+        return None
+    return int(kernel.vmem_footprint(dict(shape), dict(config)))
+
+
+def proven_violations(kernel: "TunableKernel", shape: Shape, config: Config,
+                      profile: DeviceProfile) -> List[str]:
+    """Device limits ``config`` provably violates at ``shape``.
+
+    Empty list means "no proof of infeasibility" — it does NOT mean the
+    config is feasible.  A footprint model that raises yields no proof
+    (the declaration bug is the linter's job, not the prune path's).
+    """
+    try:
+        fp = footprint_bytes(kernel, shape, config)
+    except Exception:
+        return []
+    if fp is not None and not profile.fits_vmem(fp):
+        return [f"vmem: declared footprint {fp} B > {profile.vmem_bytes} B "
+                f"on {profile.name}"]
+    return []
+
+
+def proven_checker(kernel: "TunableKernel", shape: Shape,
+                   profile: DeviceProfile) -> Optional[ProvenChecker]:
+    """Engine-attachable checker, or ``None`` if no footprint model."""
+    if kernel.vmem_footprint is None:
+        return None
+    frozen = dict(shape)
+
+    def check(config: Config) -> List[str]:
+        return proven_violations(kernel, frozen, config, profile)
+
+    return check
+
+
+def device_constraints(
+        kernel: "TunableKernel", shape: Shape, profile: DeviceProfile,
+        names: Tuple[str, ...]
+) -> List[Tuple[Callable[..., bool], Tuple[str, ...], str]]:
+    """Auto-imposed constraints, CLTune §III-A style.
+
+    Returns ``(fn, names, label)`` triples ready for
+    ``SearchSpace.add_constraint``, spanning the given parameter
+    ``names``.  Only *proof* rules become constraints (the VMEM
+    budget); alignment stays advisory because a padded tile is legal.
+    """
+    checker = proven_checker(kernel, shape, profile)
+    if checker is None:
+        return []
+
+    def fits(*values: object) -> bool:
+        return not checker(dict(zip(names, values)))
+
+    label = f"analyze:vmem<={profile.vmem_bytes}B@{profile.name}"
+    return [(fits, tuple(names), label)]
+
+
+def install_device_constraints(space: SearchSpace, kernel: "TunableKernel",
+                               shape: Shape,
+                               profile: DeviceProfile) -> int:
+    """Add the proven device constraints to ``space``; returns count."""
+    triples = device_constraints(kernel, shape, profile, space.names)
+    for fn, names, label in triples:
+        space.add_constraint(fn, names, label=label)
+    return len(triples)
+
+
+def alignment_findings(kernel: "TunableKernel", shape: Shape, config: Config,
+                       profile: DeviceProfile, *,
+                       context: str = "heuristic") -> List[Finding]:
+    """Advisory MXU/sublane alignment report for one config.
+
+    Flags integer block-like parameters (``BLOCK_*``) that are not a
+    multiple of the dtype's sublane tile — such tiles get padded by the
+    Mosaic layout pass, wasting VPU lanes.  Info severity: legal, just
+    suspicious.
+    """
+    sub = profile.sublanes(dtype_bytes(shape))
+    out: List[Finding] = []
+    for name, value in config.items():
+        if not name.startswith("BLOCK"):
+            continue
+        if isinstance(value, bool) or not isinstance(value, int):
+            continue
+        if value % sub:
+            out.append(Finding(
+                rule_id="align-sublane", severity="info",
+                kernel=kernel.name, shape=dict(shape),
+                profile=profile.name,
+                detail=f"{context} {name}={value} is not a multiple of the "
+                       f"{sub}-row sublane tile on {profile.name} "
+                       f"(padded, wasted lanes)",
+                data={"param": name, "value": value, "sublanes": sub,
+                      "context": context}))
+        elif value % profile.mxu_dim and value > profile.mxu_dim:
+            out.append(Finding(
+                rule_id="align-mxu", severity="info",
+                kernel=kernel.name, shape=dict(shape),
+                profile=profile.name,
+                detail=f"{context} {name}={value} is not a multiple of the "
+                       f"{profile.mxu_dim}-wide MXU tile",
+                data={"param": name, "value": value,
+                      "mxu_dim": profile.mxu_dim, "context": context}))
+    return out
+
+
+def resource_findings(kernel: "TunableKernel", shape: Shape,
+                      profile: DeviceProfile,
+                      feasible_sample: List[Dict[str, Any]],
+                      confidence: str) -> List[Finding]:
+    """Device-feasibility findings for one (kernel, shape, profile).
+
+    * every sampled feasible config over budget -> the whole space is
+      unusable on that device: error when the sample was exhaustive,
+      warning otherwise;
+    * a nonzero fraction over budget -> info with the proven fraction
+      (these are exactly the configs the engine will answer without
+      compiling).
+    """
+    if kernel.vmem_footprint is None or not feasible_sample:
+        return []
+    over = 0
+    broken = 0
+    for cfg in feasible_sample:
+        try:
+            fp = footprint_bytes(kernel, shape, cfg)
+        except Exception:
+            broken += 1
+            continue
+        if fp is not None and not profile.fits_vmem(fp):
+            over += 1
+    out: List[Finding] = []
+    n = len(feasible_sample)
+    if broken:
+        out.append(Finding(
+            rule_id="footprint-model-raises", severity="error",
+            kernel=kernel.name, shape=dict(shape), profile=profile.name,
+            detail=f"vmem_footprint raised on {broken}/{n} feasible "
+                   f"config(s); a raising model yields no proofs and no "
+                   f"pruning", data={"raised": broken, "sampled": n}))
+    if over == n and broken == 0:
+        exact = confidence == "exact" and n < 512  # sample not truncated
+        out.append(Finding(
+            rule_id="space-over-vmem", severity="error" if exact
+            else "warning",
+            kernel=kernel.name, shape=dict(shape), profile=profile.name,
+            detail=f"every {'feasible config' if exact else 'sampled config'}"
+                   f" ({n}) exceeds the {profile.vmem_bytes} B VMEM budget "
+                   f"on {profile.name} — the space is unusable there",
+            data={"over": over, "sampled": n, "confidence": confidence}))
+    elif over:
+        out.append(Finding(
+            rule_id="device-feasibility", severity="info",
+            kernel=kernel.name, shape=dict(shape), profile=profile.name,
+            detail=f"{over}/{n} sampled feasible config(s) provably exceed "
+                   f"VMEM on {profile.name}; the engine answers these "
+                   f"without compiling (proven_pruned)",
+            data={"over": over, "sampled": n, "confidence": confidence}))
+    return out

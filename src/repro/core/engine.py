@@ -54,7 +54,7 @@ import math
 import os
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .artifacts import CompiledArtifact
 from .evaluators import Evaluator, KernelSpec, Measurement
@@ -132,6 +132,14 @@ class EngineConfig:
     #: prune a config when the predictor's feasibility probability falls
     #: below this threshold
     predict_threshold: float = 0.5
+    #: optional *proven*-infeasibility checker (``config -> [violations]``,
+    #: e.g. :func:`repro.analyze.proven_checker`): configs with a
+    #: non-empty violation list are answered ``inf`` without compiling.
+    #: Unlike ``predict_prune`` this is a static proof (declared VMEM
+    #: footprint vs the device budget), so there is no survivor-fraction
+    #: hedge — a proof needs none.  None (default) leaves every search
+    #: trial-identical to the checker-less engine.
+    proven_checker: Optional[Callable[[Config], List[str]]] = None
 
     def __post_init__(self):
         if self.workers is None:
@@ -158,6 +166,10 @@ class EngineConfig:
             raise ValueError("predict_survivors must be in (0, 1]")
         if not (0.0 <= self.predict_threshold <= 1.0):
             raise ValueError("predict_threshold must be in [0, 1]")
+        if self.proven_checker is not None \
+                and not callable(self.proven_checker):
+            raise TypeError("proven_checker must be callable "
+                            "(config -> list of violations) or None")
 
 
 @dataclasses.dataclass
@@ -175,6 +187,9 @@ class EngineStats:
     pruned: int = 0                 # measurements aborted by early stop
     predicted_pruned: int = 0       # configs answered inf by the predictor's
                                     # infeasibility head, never compiled
+    proven_pruned: int = 0          # configs answered inf by a static
+                                    # resource *proof* (repro.analyze),
+                                    # never compiled; no survivor guard
     predictor_rank_used: int = 0    # ask() batches reordered by the predictor
     compile_failures: int = 0       # distinct configs failed in prepare
     measure_failures: int = 0       # distinct configs failed in measure
@@ -418,6 +433,44 @@ class EvaluationEngine:
             return math.inf
         return obj.scalarize(m.as_metrics())
 
+    def _proven_gate(self, batch: List[Config]
+                     ) -> Tuple[List[Config],
+                                List[Tuple[Config, float]]]:
+        """Answer provably-infeasible configs ``inf`` without compiling.
+
+        Driven by ``EngineConfig.proven_checker`` (a static resource
+        proof, e.g. declared VMEM footprint vs the device budget — see
+        :mod:`repro.analyze`).  Unlike :meth:`_predictor_gate` there is
+        no survivor-fraction guard and no threshold: a proof needs no
+        hedge, and because the analytical/compile path scores the same
+        configs ``inf`` anyway, pruning them cannot change the winner —
+        it only skips their compiles.  Memo-hit configs pass through
+        (answering from the memo is already compile-free), and a
+        checker that raises proves nothing: the config passes.
+        """
+        checker = self.config.proven_checker
+        if checker is None or not batch:
+            return batch, []
+        survivors: List[Config] = []
+        pruned: List[Tuple[Config, float]] = []
+        for config in batch:
+            key = self.space.config_key(config)
+            if key not in self.measurements:
+                try:
+                    violations = checker(config)
+                except Exception:  # noqa: BLE001 — a proof must not break
+                    log.debug("proven_checker raised; config passes",
+                              exc_info=True)
+                    violations = []
+                if violations:
+                    self.stats.proven_pruned += 1
+                    self.stats.evaluations += 1
+                    pruned.append((config, math.inf))
+                    self._history.append((dict(config), math.inf))
+                    continue
+            survivors.append(config)
+        return survivors, pruned
+
     def _predictor_gate(self, batch: List[Config]
                         ) -> Tuple[List[Config],
                                    List[Tuple[Config, float]]]:
@@ -543,9 +596,11 @@ class EvaluationEngine:
                     break
                 self.stats.batches += 1
                 self.stats.max_batch = max(self.stats.max_batch, len(batch))
-                # 0. predictor-first: rank the batch and (optionally) answer
-                #    predicted-infeasible configs inf without compiling
+                # 0. proven-infeasible first (static resource proof, no
+                #    hedge), then predictor ranking/pruning on the rest
+                batch, proven_pruned = self._proven_gate(batch)
                 batch, pre_pruned = self._predictor_gate(batch)
+                pre_pruned = proven_pruned + pre_pruned
                 keys = [self.space.config_key(c) for c in batch]
                 # 1. launch compiles for every fresh config in the batch
                 for config, key in zip(batch, keys):

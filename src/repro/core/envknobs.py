@@ -22,7 +22,11 @@ used ``raw or default``.  This module is the one place those rules live:
 Knobs parsed through here: ``REPRO_AUTOTUNE``, ``REPRO_ONLINE_TUNE``,
 ``REPRO_TUNE_CACHE``, ``REPRO_DTUNE_WORKERS/MODE/DRIVER``, the
 compile-artifact store's ``REPRO_ARTIFACT_CACHE``/``REPRO_ARTIFACT_DIR``
-and the prediction layer's ``REPRO_PREDICTOR``/``REPRO_PREDICT_PRUNE``.
+and the prediction layer's ``REPRO_PREDICTOR``/``REPRO_PREDICT_PRUNE``,
+plus the static analyzer's ``REPRO_ANALYZE`` (run the pre-search space
+audit + proven-infeasible pruning by default) and
+``REPRO_ANALYZE_STRICT`` (escalate error findings to a raised
+ValueError before any search runs).
 """
 
 from __future__ import annotations

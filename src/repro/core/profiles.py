@@ -53,6 +53,15 @@ class DeviceProfile:
         """Minimum second-minor tile dimension for a dtype (8/16/32)."""
         return self.sublanes_f32 * max(1, 4 // max(1, dtype_bytes))
 
+    def fits_vmem(self, nbytes: int) -> bool:
+        """Whether a declared working-set footprint fits this core's VMEM.
+
+        This is the paper's local-memory auto-constraint as a device
+        method: ``repro.analyze`` proves configs infeasible with it, and
+        a footprint exactly at the budget *fits* (the budget is usable
+        bytes, not a strict bound)."""
+        return nbytes <= self.vmem_bytes
+
     @property
     def flops_per_byte(self) -> float:
         """Machine balance: FLOPs available per HBM byte moved."""

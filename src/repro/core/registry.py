@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import logging
-from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
+from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
                     Sequence, Tuple)
 
 import numpy as np
@@ -159,6 +159,10 @@ class TunableKernel:
         if self.shape_key is not None:
             return None
         return "_".join(f"{k}{shape[k]}" for k in sorted(shape))
+
+    def supports_extended(self) -> bool:
+        """True when the space factory takes an ``extended=`` kwarg."""
+        return _accepts(self.space, "extended")
 
     def make_space(self, shape: Shape, extended: bool = False) -> SearchSpace:
         if _accepts(self.space, "extended"):
@@ -356,6 +360,23 @@ def _validated_heuristic(k: TunableKernel, shape: Shape) -> Config:
     return cfg
 
 
+def _proven_violations(k: TunableKernel, shape: Shape, config: Config,
+                       profile: DeviceProfile) -> List[str]:
+    """Static resource proofs against serving ``config`` on ``profile``.
+
+    The transfer/predicted steps of the fallback chain borrow configs
+    tuned elsewhere; a config tuned on a 128 MiB-VMEM device must not be
+    served onto a 16 MiB one when its *declared* footprint proves it
+    cannot fit.  Late import mirrors the ``tune.api`` pattern —
+    ``repro.analyze`` sits above the core.  Empty list = no proof.
+    """
+    try:
+        from ..analyze.resource import proven_violations
+        return proven_violations(k, shape, config, profile)
+    except Exception:  # noqa: BLE001 — a proof layer must never break lookup
+        return []
+
+
 def transfer_config(k: TunableKernel, shape: Shape, *,
                     profile: DeviceProfile = TPU_V5E,
                     cache: Optional[TuningCache] = None,
@@ -382,6 +403,13 @@ def transfer_config(k: TunableKernel, shape: Shape, *,
         # out-of-space values to a call site that will build with them
         usable = usable_seeds(space, [entry.config])
         if usable:
+            proven = _proven_violations(k, shape, usable[0], profile)
+            if proven:
+                log.info("transfer: rejecting config tuned for %s (proven "
+                         "infeasible on %s: %s): %s", entry.shape,
+                         profile.name, "; ".join(proven),
+                         dict(entry.config))
+                continue
             return usable[0], entry
         log.info("transfer: rejecting config tuned for %s (infeasible for "
                  "%s): %s", entry.shape, dict(shape), dict(entry.config))
@@ -416,6 +444,12 @@ def _predicted_config(k: TunableKernel, shape: Shape, *,
         if not usable:
             log.info("predicted config for %s rejected (infeasible): %s",
                      k.name, suggested[0])
+            return None
+        proven = _proven_violations(k, shape, usable[0], profile)
+        if proven:
+            log.info("predicted config for %s rejected (proven infeasible "
+                     "on %s: %s): %s", k.name, profile.name,
+                     "; ".join(proven), usable[0])
             return None
         return usable[0], getattr(pred, "name", type(pred).__name__)
     except Exception as e:  # noqa: BLE001 — prediction is advisory

@@ -17,6 +17,7 @@ The paper's four search-space observations drive the representation:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import itertools
 import math
 import random
@@ -43,7 +44,7 @@ class Parameter:
     name: str
     values: Tuple[object, ...]
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not self.values:
             raise ValueError(f"parameter {self.name!r} has no values")
         if len({_value_ident(v) for v in self.values}) != len(self.values):
@@ -56,6 +57,41 @@ class Parameter:
                 return i
         raise ValueError(f"{value!r} is not a value of "
                          f"parameter {self.name!r}")
+
+
+def constraint_arity_error(fn: Callable[..., bool],
+                           n_names: int) -> Optional[str]:
+    """Why ``fn`` cannot be called with ``n_names`` positional arguments.
+
+    ``None`` means compatible — or unknowable: C builtins and exotic
+    callables without an inspectable signature get the benefit of the
+    doubt (the paper's constraints are always plain lambdas).  Varargs
+    functions accept any arity, so the auto-imposed device constraints
+    (``fn(*values)`` over every space parameter) always pass.
+    """
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    required = 0
+    maximum: Optional[int] = 0
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            maximum = None if maximum is None else maximum + 1
+            if p.default is p.empty:
+                required += 1
+        elif p.kind is p.VAR_POSITIONAL:
+            maximum = None
+        elif p.kind is p.KEYWORD_ONLY and p.default is p.empty:
+            return (f"constraint fn has required keyword-only parameter "
+                    f"{p.name!r}; constraints are called positionally")
+    if n_names < required:
+        return (f"constraint declares {n_names} parameter name(s) but its "
+                f"fn requires {required} positional argument(s)")
+    if maximum is not None and n_names > maximum:
+        return (f"constraint declares {n_names} parameter name(s) but its "
+                f"fn accepts at most {maximum} positional argument(s)")
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +116,7 @@ class SearchSpace:
         per-dimension moves).
     """
 
-    def __init__(self, parameters: Sequence[Parameter] | None = None):
+    def __init__(self, parameters: Sequence[Parameter] | None = None) -> None:
         self._params: List[Parameter] = []
         self._by_name: Dict[str, Parameter] = {}
         self._constraints: List[Constraint] = []
@@ -95,6 +131,9 @@ class SearchSpace:
                       name: str | None = None,
                       values: Sequence[object] | None = None) -> "SearchSpace":
         if param is None:
+            if name is None or values is None:
+                raise TypeError("add_parameter needs a Parameter or both "
+                                "name= and values=")
             param = Parameter(name=name, values=tuple(values))
         if param.name in self._by_name:
             raise ValueError(f"duplicate parameter {param.name!r}")
@@ -108,6 +147,12 @@ class SearchSpace:
         missing = [n for n in names if n not in self._by_name]
         if missing:
             raise KeyError(f"constraint references unknown parameters {missing}")
+        # arity mismatches raise here, at declaration time, instead of as
+        # a bare TypeError mid-search deep inside a strategy
+        arity_err = constraint_arity_error(fn, len(names))
+        if arity_err:
+            raise ValueError(
+                f"constraint {label or tuple(names)!r}: {arity_err}")
         self._constraints.append(Constraint(fn=fn, names=tuple(names), label=label))
         self._feasible_memo = None
         return self
@@ -274,7 +319,7 @@ class SearchSpace:
         return rng.choice(ns) if ns else None
 
     # -- misc ------------------------------------------------------------------
-    def config_key(self, config: Mapping[str, object]) -> Tuple:
+    def config_key(self, config: Mapping[str, object]) -> Tuple[object, ...]:
         """Hashable identity of a config (parameter order normalised).
 
         Bool values are tagged so ``{"X": True}`` and ``{"X": 1}`` hash to

@@ -67,6 +67,8 @@ class TuningOutcome:
     objective: Optional[str] = None
     #: name of the predictor that ranked/pruned the search (None = off)
     predictor: Optional[str] = None
+    #: pre-search static-analysis stats (:mod:`repro.analyze`; None = off)
+    analysis: Optional[Dict[str, Any]] = None
 
     @property
     def best_config(self) -> Optional[Config]:
@@ -132,6 +134,19 @@ class TuningOutcome:
                     f"(ranked {s.get('predictor_rank_used', 0)} batches, "
                     f"pruned {s.get('predicted_pruned', 0)} predicted-"
                     f"infeasible configs before compile)")
+            if self.analysis:
+                a = self.analysis
+                fc = a.get("findings", {})
+                lines.append(
+                    f"analysis: {a.get('feasible', '?')}/"
+                    f"{a.get('examined', '?')} examined configs feasible "
+                    f"({a.get('confidence', '?')}), "
+                    f"{a.get('dead_values', 0)} dead value(s), findings "
+                    f"{fc.get('error', 0)}e/{fc.get('warning', 0)}w/"
+                    f"{fc.get('info', 0)}i, proven checker "
+                    f"{'on' if a.get('proven_checker') else 'off'} "
+                    f"({s.get('proven_pruned', 0)} proven-infeasible "
+                    f"pruned)")
         return "\n".join(lines)
 
 
@@ -264,6 +279,55 @@ class Tuner:
         self.space.add_constraint(_fits, names, label="device:vmem")
         self._vmem_constraint_added = True
 
+    # -- pre-search static analysis ----------------------------------------------
+    def _run_analysis(self) -> Dict[str, Any]:
+        """Audit the (device-constrained) space before searching it.
+
+        Returns the stats dict attached to the outcome.  Under
+        ``REPRO_ANALYZE_STRICT`` an error-severity finding raises instead
+        of burning the search budget on a provably-broken space.
+        """
+        from ..analyze import audit_space, space_findings, strict_default
+        name = self._spec.name if self._spec is not None else "kernel"
+        report = audit_space(self.space)
+        findings = space_findings(report, kernel=name,
+                                  shape=getattr(self, "_shape", None))
+        errors = [f for f in findings if f.severity == "error"]
+        if errors and strict_default():
+            raise ValueError(
+                f"pre-search analysis found {len(errors)} error "
+                f"finding(s) for {name!r} (REPRO_ANALYZE_STRICT): "
+                + "; ".join(f.detail for f in errors[:3]))
+        for f in findings:
+            log.log(logging.WARNING if f.severity != "info"
+                    else logging.INFO, "analysis: %s", f)
+        stats = report.stats()
+        stats["findings"] = {
+            s: sum(1 for f in findings if f.severity == s)
+            for s in ("error", "warning", "info")}
+        return stats
+
+    def _proven_checker(self) -> Optional[Callable]:
+        """Static proven-infeasibility checker for the engine, built from
+        the declared footprint model (None when no model declared)."""
+        foot = self._vmem_footprint
+        if foot is None:
+            return None
+        limit = self.profile.vmem_bytes
+        prof_name = self.profile.name
+
+        def check(config: Config) -> list:
+            try:
+                fp = int(foot(dict(config)))
+            except Exception:  # noqa: BLE001 — a broken model proves nothing
+                return []
+            if fp > limit:
+                return [f"vmem: declared footprint {fp} B > {limit} B "
+                        f"on {prof_name}"]
+            return []
+
+        return check
+
     # -- search ------------------------------------------------------------------
     def tune(self, strategy: str | Strategy = "full",
              budget: Optional[int] = None, seed: int = 0,
@@ -273,6 +337,7 @@ class Tuner:
              seeds: Optional[Sequence[Config]] = None,
              objective: "str | Any | None" = None,
              predictor: Any = None,
+             analyze: Optional[bool] = None,
              **strategy_kwargs) -> TuningOutcome:
         """Search the space; all evaluation flows through the
         :class:`~repro.core.engine.EvaluationEngine` (``engine`` takes an
@@ -295,12 +360,24 @@ class Tuner:
         ``REPRO_PREDICTOR`` env default, a kind string like
         ``"learned"``, a ``{"kind", "payload"}`` dict, or an instance);
         when resolved, the engine ranks every ask() batch predictor-first
-        and may prune predicted-infeasible configs before compile."""
+        and may prune predicted-infeasible configs before compile.
+
+        ``analyze`` runs the :mod:`repro.analyze` pre-search pass: the
+        (device-constrained) space is audited, the stats ride on
+        ``outcome.analysis``, and the engine gets a proven-infeasibility
+        checker so statically-over-budget configs are answered without
+        compiling (``EngineStats.proven_pruned``).  None defers to the
+        ``REPRO_ANALYZE`` env knob (strict bool, default off) —
+        analyzer-off searches are trial-identical to earlier releases."""
         if self._spec is None:
             raise ValueError("no kernel registered; call add_kernel first")
         if self.space.num_dimensions == 0:
             raise ValueError("no parameters registered; call add_parameter")
         self._install_device_constraints()
+        if analyze is None:
+            from ..analyze import analyze_default
+            analyze = analyze_default()
+        analysis = self._run_analysis() if analyze else None
 
         strat = (strategy if isinstance(strategy, Strategy)
                  else make_strategy(strategy, **strategy_kwargs))
@@ -319,6 +396,11 @@ class Tuner:
             engine = EngineConfig(**(engine or {}))
         if objective is not None:
             engine = dataclasses.replace(engine, objective=objective)
+        if analyze and engine.proven_checker is None:
+            checker = self._proven_checker()
+            if checker is not None:
+                engine = dataclasses.replace(engine, proven_checker=checker)
+                analysis["proven_checker"] = True
         if engine.predictor is None:
             # resolve the predictor= argument (or the REPRO_PREDICTOR env
             # default) — needs the kernel declaration for spaces/heuristics,
@@ -353,7 +435,8 @@ class Tuner:
             budget=budget, engine_stats=result.extra.get("engine"),
             objective=resolved_objective.spec,
             predictor=(getattr(engine.predictor, "name", None)
-                       if engine.predictor is not None else None))
+                       if engine.predictor is not None else None),
+            analysis=analysis)
         if record_to_cache and result.best is not None:
             cache = self._cache if self._cache is not None else default_cache()
             # from_tunable stashes the problem shape in the spec's meta; a

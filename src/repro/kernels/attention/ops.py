@@ -79,6 +79,11 @@ def _arg_specs(shape: Shape):
             jax.ShapeDtypeStruct((Sk, D), f32))
 
 
+def _elt_bytes(shape: Shape) -> int:
+    """Activation element width from the shape's dtype (default float32)."""
+    return jnp.dtype(shape.get("dtype", "float32")).itemsize
+
+
 @tunable(
     name=KERNEL_NAME,
     space=_space,
@@ -87,10 +92,13 @@ def _arg_specs(shape: Shape):
                                   s.get("causal", True)),
     make_args=_make_args,
     arg_specs=_arg_specs,
+    # dtype threads through model and footprint with the same element
+    # width so static VMEM proofs agree with the analytical cliff
     analytical_model=lambda s, cfg, prof: analytical_time(
         cfg, prof, s["Sq"], s["Sk"], s["D"],
-        causal=s.get("causal", True)),
-    vmem_footprint=lambda s, cfg: vmem_footprint(cfg, s["D"]),
+        causal=s.get("causal", True), elt_bytes=_elt_bytes(s)),
+    vmem_footprint=lambda s, cfg: vmem_footprint(
+        cfg, s["D"], elt_bytes=_elt_bytes(s)),
     reference=lambda s: (lambda q, k, v: attention_reference(
         q, k, v, causal=s.get("causal", True))),
     default_shapes=(_shape(4096, 4096, 128, causal=True),),

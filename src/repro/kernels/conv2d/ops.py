@@ -85,6 +85,11 @@ def _arg_specs(shape: Shape):
             jax.ShapeDtypeStruct((Fh, Fw), jnp.float32))
 
 
+def _elt_bytes(shape: Shape) -> int:
+    """Image element width from the shape's dtype (default float32)."""
+    return jnp.dtype(shape.get("dtype", "float32")).itemsize
+
+
 @tunable(
     name=KERNEL_NAME,
     space=_space,
@@ -92,9 +97,13 @@ def _arg_specs(shape: Shape):
     shape_key=lambda s: shape_key(s["H"], s["W"], s["Fh"], s["Fw"]),
     make_args=_make_args,
     arg_specs=_arg_specs,
+    # dtype threads through model and footprint with the same element
+    # width so static VMEM proofs agree with the analytical cliff
     analytical_model=lambda s, cfg, prof: analytical_time(
-        cfg, prof, s["H"], s["W"], s["Fh"], s["Fw"]),
-    vmem_footprint=lambda s, cfg: vmem_footprint(cfg, s["Fh"], s["Fw"]),
+        cfg, prof, s["H"], s["W"], s["Fh"], s["Fw"],
+        elt_bytes=_elt_bytes(s)),
+    vmem_footprint=lambda s, cfg: vmem_footprint(
+        cfg, s["Fh"], s["Fw"], elt_bytes=_elt_bytes(s)),
     reference=lambda s: conv2d_reference,
     default_shapes=(_shape(4096, 4096, 3, 3),),
     # paper V-B: budget 107 = 1/32 of the 3424-config EXTENDED space, so

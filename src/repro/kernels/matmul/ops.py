@@ -123,6 +123,11 @@ def _arg_specs(shape: Shape):
             jax.ShapeDtypeStruct((K, N), jnp.float32))
 
 
+def _elt_bytes(shape: Shape) -> int:
+    """Input element width from the shape's dtype (default float32)."""
+    return jnp.dtype(shape.get("dtype", "float32")).itemsize
+
+
 @tunable(
     name=KERNEL_NAME,
     space=_space,
@@ -131,9 +136,13 @@ def _arg_specs(shape: Shape):
                                   s.get("dtype", "float32")),
     make_args=_make_args,
     arg_specs=_arg_specs,
+    # dtype threads through the model AND the footprint with the same
+    # element width, so a static VMEM proof (repro.analyze) can never
+    # disagree with the analytical cliff — pruning stays winner-identical
     analytical_model=lambda s, cfg, prof: analytical_time(
-        cfg, prof, s["M"], s["N"], s["K"]),
-    vmem_footprint=lambda s, cfg: vmem_footprint(cfg),
+        cfg, prof, s["M"], s["N"], s["K"], elt_bytes=_elt_bytes(s)),
+    vmem_footprint=lambda s, cfg: vmem_footprint(
+        cfg, elt_bytes=_elt_bytes(s)),
     reference=lambda s: (lambda a, b: ref.gemm_reference(a, b)),
     default_shapes=(_shape(2048, 2048, 2048),),
     defaults={"strategy": "annealing", "budget": 100},

@@ -314,6 +314,24 @@ class ServeEngine:
         current = self._cache.get(*triple, objective=obj)
         if current is None:
             return
+        # static-proof guard: a fleet-merged or hand-edited cache entry
+        # whose *declared* footprint exceeds this device's VMEM must never
+        # hot-swap into the live slot (repro.analyze proves it cannot run)
+        res = self.kernel_resolutions.get(name)
+        if res is not None:
+            try:
+                from ..analyze.resource import proven_violations
+                from ..core.registry import resolve as _resolve_kernel
+                viol = proven_violations(_resolve_kernel(res.kernel),
+                                         res.shape, current.config,
+                                         self.profile)
+            except Exception:  # noqa: BLE001 — the guard must not break swaps
+                viol = []
+            if viol:
+                log.warning("online: refusing hot-swap for %s — cache "
+                            "entry proven infeasible on %s: %s",
+                            name, self.profile.name, "; ".join(viol))
+                return
         self._sources[name] = "tuned"
         gen = self._slot.swap(name, dict(current.config))
         log.info("online: hot-swap %s -> %s (generation %d)",

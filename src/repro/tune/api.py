@@ -73,6 +73,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                 seeds: Optional[List[Dict[str, Any]]] = None,
                 objective: "str | Any | None" = None,
                 predictor: Any = None,
+                analyze: Optional[bool] = None,
                 **strategy_kwargs) -> TuningOutcome:
     """Tune one registered kernel for one concrete shape.
 
@@ -111,6 +112,12 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
     ``REPRO_PREDICTOR`` env default, normally off), a kind string
     (``"heuristic"|"costmodel"|"transfer"|"learned"``), a
     ``{"kind", "payload"}`` dict, or a ready instance.
+
+    ``analyze`` runs the :mod:`repro.analyze` pre-search pass (space
+    audit stats on ``outcome.analysis`` + proven-infeasible pruning in
+    the engine, ``EngineStats.proven_pruned``); None defers to the
+    ``REPRO_ANALYZE`` env knob (default off — analyzer-off searches stay
+    trial-identical to earlier releases).
     """
     k = resolve(kernel)
     shape = dict(shape)
@@ -137,7 +144,7 @@ def tune_kernel(kernel: "TunableKernel | str", shape: Shape, *,
                       record_to_cache=record, shape_key=k.key_for(shape),
                       engine=engine, seeds=all_seeds or None,
                       objective=objective, predictor=predictor,
-                      **strategy_kwargs)
+                      analyze=analyze, **strategy_kwargs)
 
 
 def tune_kernel_distributed(kernel: "TunableKernel | str", shape: Shape, *,

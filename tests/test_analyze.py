@@ -1,0 +1,824 @@
+"""Static analyzer (repro.analyze): space audit (exact + stratified),
+declaration lint rules against broken fixture kernels, the registry-wide
+clean sweep, proven-infeasible engine pruning (winner-identical, no
+survivor guard), tuner/env-knob integration, proven rejection in the
+transfer/predicted lookup steps and the serve hot-swap guard, and the
+``python -m repro.analyze`` CLI contract."""
+
+import json
+import math
+
+import pytest
+
+from repro.core import (EngineConfig, EvaluationEngine, KernelSpec,
+                        SearchSpace, TPUAnalyticalEvaluator, TuningCache,
+                        lookup_resolved, make_strategy, tunable)
+from repro.core.profiles import PROFILES, TPU_V3, TPU_V5E
+from repro.core.registry import (REGISTRY, KernelRegistry, _ensure_builtins,
+                                 transfer_config)
+from repro.core.space import Constraint, constraint_arity_error
+from repro.core.tuner import Tuner
+from repro.analyze import (AnalysisReport, Finding, analyze_registry,
+                           audit_space, dtype_bytes, footprint_bytes,
+                           install_device_constraints, kernel_findings,
+                           proven_checker, proven_violations, space_findings)
+from repro.analyze.__main__ import main as analyze_main
+from repro.analyze.resource import alignment_findings
+from repro.analyze.space_audit import _stratified_sample
+from repro.tune import tune_kernel
+
+MIB = 1024 * 1024
+
+
+# -- fixtures ----------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _clear_analyze_env(monkeypatch):
+    """Keep every test deterministic against ambient REPRO_* knobs."""
+    monkeypatch.delenv("REPRO_ANALYZE", raising=False)
+    monkeypatch.delenv("REPRO_ANALYZE_STRICT", raising=False)
+    monkeypatch.delenv("REPRO_PREDICTOR", raising=False)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return TuningCache(str(tmp_path / "cache.json"))
+
+
+def _space_of(params, constraints=()):
+    sp = SearchSpace()
+    for name, values in params.items():
+        sp.add_parameter(name=name, values=tuple(values))
+    for fn, names, label in constraints:
+        sp.add_constraint(fn, names, label)
+    return sp
+
+
+def _foot_kernel(name="afoot", values=(1, 2, 4, 8, 16, 32, 64),
+                 heuristic=None, register=False, registry=None,
+                 default_shapes=()):
+    """footprint = X MiB, with the matching analytical VMEM cliff:
+    the model returns inf exactly where the static proof fires, so
+    proven pruning can never change a winner."""
+
+    def space(shape):
+        sp = SearchSpace()
+        sp.add_parameter(name="X", values=values)
+        sp.add_constraint(lambda x: shape["N"] % x == 0, ("X",), "N % X")
+        return sp
+
+    def model(s, cfg, prof):
+        if cfg["X"] * MIB > prof.vmem_bytes:
+            return math.inf
+        return 1.0 / cfg["X"]
+
+    @tunable(name=name, space=space,
+             heuristic=heuristic or (lambda s: {"X": 1}),
+             analytical_model=model,
+             vmem_footprint=lambda s, cfg: cfg["X"] * MIB,
+             default_shapes=default_shapes,
+             register=register, registry=registry)
+    def build(shape, config):
+        return lambda: config["X"]
+
+    return build
+
+
+# -- satellite 1: constraint-arity validation at declaration time ------------
+
+def test_add_constraint_rejects_arity_mismatch():
+    sp = _space_of({"X": (1, 2), "Y": (1, 2)})
+    with pytest.raises(ValueError, match="xy-match"):
+        sp.add_constraint(lambda x: True, ("X", "Y"), "xy-match")
+    with pytest.raises(ValueError, match="constraint"):
+        sp.add_constraint(lambda x, y, z: True, ("X", "Y"))
+    # a keyword-only required parameter can never be bound positionally
+    with pytest.raises(ValueError):
+        sp.add_constraint(lambda x, *, flag: True, ("X", "Y"), "kw-only")
+
+
+def test_add_constraint_accepts_matching_and_varargs():
+    sp = _space_of({"X": (1, 2), "Y": (1, 2)})
+    sp.add_constraint(lambda x, y: x <= y, ("X", "Y"), "exact-arity")
+    sp.add_constraint(lambda *vals: True, ("X", "Y"), "varargs")
+    sp.add_constraint(lambda x, y=0: True, ("X",), "optional-tail")
+    assert len(sp.constraints) == 3
+
+
+def test_constraint_arity_error_helper():
+    assert constraint_arity_error(lambda x, y: True, 2) is None
+    assert constraint_arity_error(lambda *a: True, 7) is None
+    assert constraint_arity_error(lambda x: True, 2) is not None
+    assert constraint_arity_error(lambda x, y, z: True, 1) is not None
+    # unsignaturable callables (builtins) are not rejected
+    assert constraint_arity_error(max, 2) is None
+
+
+# -- space audit: exact enumeration ------------------------------------------
+
+def test_audit_exact_clean_space():
+    sp = _space_of({"X": (1, 2, 4), "Y": (1, 2)},
+                   [(lambda x, y: x >= y, ("X", "Y"), "x>=y")])
+    rep = audit_space(sp)
+    assert rep.confidence == "exact"
+    assert rep.cardinality == 6 and rep.examined == 6
+    assert rep.feasible == 5 and not rep.unsatisfiable
+    assert not rep.dead_values and not rep.unknown_params
+    assert rep.feasible_sample and all(
+        sp.is_feasible(c) for c in rep.feasible_sample)
+    assert not space_findings(rep, kernel="k")     # nothing to report
+
+
+def test_audit_detects_unsatisfiable_exact():
+    sp = _space_of({"X": (1, 2)},
+                   [(lambda x: False, ("X",), "never")])
+    rep = audit_space(sp)
+    assert rep.unsatisfiable and rep.feasible == 0
+    fs = space_findings(rep, kernel="k")
+    assert [f.rule_id for f in fs] == ["space-unsatisfiable"]
+    assert fs[0].severity == "error"
+
+
+def test_audit_detects_dead_values_and_vacuous():
+    sp = _space_of({"X": (1, 2, 3)},
+                   [(lambda x: x != 3, ("X",), "no-three"),
+                    (lambda x: x < 100, ("X",), "toothless")])
+    rep = audit_space(sp)
+    assert rep.dead_values == {"X": [3]}
+    assert rep.vacuous_constraints == ["#1:toothless"]
+    rules = {f.rule_id: f.severity for f in space_findings(rep, kernel="k")}
+    assert rules["space-dead-value"] == "warning"      # exact => warning
+    assert rules["space-vacuous-constraint"] == "info"
+
+
+def test_audit_detects_implied_constraint():
+    # every config x>=2 rejects is also rejected by x>=3 co-firing on x=1;
+    # x>=2 rejects {1}, x>=3 rejects {1,2}: x>=2 never rejects alone
+    sp = _space_of({"X": (1, 2, 3)},
+                   [(lambda x: x >= 2, ("X",), "ge2"),
+                    (lambda x: x >= 3, ("X",), "ge3")])
+    rep = audit_space(sp)
+    assert rep.implied_constraints == ["#0:ge2"]
+    assert any(f.rule_id == "space-implied-constraint"
+               for f in space_findings(rep, kernel="k"))
+
+
+def test_audit_detects_unknown_param_and_raising_constraint():
+    sp = _space_of({"X": (1, 2)})
+    # bypass add_constraint's own KeyError guard: a pre-built space with a
+    # ghost reference is exactly what the audit must still catch
+    sp._constraints.append(Constraint(fn=lambda z: True, names=("Z",),
+                                      label="ghost"))
+    sp._constraints.append(Constraint(fn=lambda x: 1 // (x - 1) >= 0,
+                                      names=("X",), label="boom"))
+    rep = audit_space(sp)
+    assert rep.unknown_params == {"#0:ghost": ["Z"]}
+    assert rep.constraint_errors == {"#1:boom": 1}     # raises on X=1
+    rules = {f.rule_id for f in space_findings(rep, kernel="k")}
+    assert {"space-unknown-param", "space-constraint-raises"} <= rules
+
+
+# -- space audit: stratified sampling ----------------------------------------
+
+def test_audit_large_space_goes_probabilistic():
+    sp = _space_of({"X": (1, 2, 3, 4), "Y": (1, 2, 3, 4)},
+                   [(lambda x: False, ("X",), "never")])
+    rep = audit_space(sp, exact_limit=4, samples=32)
+    assert rep.confidence == "probabilistic"
+    assert rep.examined == 32 and rep.unsatisfiable
+    fs = space_findings(rep, kernel="k")
+    # sampled claims are demoted one severity step
+    assert fs[0].rule_id == "space-unsatisfiable"
+    assert fs[0].severity == "warning"
+
+
+def test_probabilistic_dead_value_is_info():
+    sp = _space_of({"X": (1, 2, 3), "Y": (1, 2, 3)},
+                   [(lambda x: x != 3, ("X",), "no-three")])
+    rep = audit_space(sp, exact_limit=4, samples=30)
+    assert rep.confidence == "probabilistic"
+    assert rep.dead_values == {"X": [3]}
+    by_rule = {f.rule_id: f for f in space_findings(rep, kernel="k")}
+    assert by_rule["space-dead-value"].severity == "info"
+    # vacuous/implied claims need exhaustive evidence: never emitted sampled
+    assert not rep.vacuous_constraints and not rep.implied_constraints
+
+
+def test_stratified_sample_covers_every_value():
+    import random
+    sp = _space_of({"X": (1, 2, 3, 4), "Y": ("a", "b"), "Z": (True, False)})
+    sample = _stratified_sample(sp, 8, random.Random(0))
+    assert len(sample) == 8
+    for p in sp.parameters:
+        seen = {cfg[p.name] for cfg in sample}
+        assert seen == set(p.values), f"{p.name} not fully covered"
+
+
+# -- resource checker --------------------------------------------------------
+
+def test_dtype_bytes_from_shape():
+    assert dtype_bytes({"dtype": "float32"}) == 4
+    assert dtype_bytes({"dtype": "bfloat16"}) == 2
+    assert dtype_bytes({"dtype": "int8"}) == 1
+    assert dtype_bytes({}) == 4                       # default f32
+
+
+def test_proven_violations_and_checker():
+    k = _foot_kernel()
+    shape = {"N": 64}
+    assert proven_violations(k, shape, {"X": 1}, TPU_V3) == []
+    viol = proven_violations(k, shape, {"X": 64}, TPU_V3)
+    assert len(viol) == 1 and "vmem" in viol[0] and "tpu_v3" in viol[0]
+    # 64 MiB fits the 128 MiB devices: a proof is device-specific
+    assert proven_violations(k, shape, {"X": 64}, TPU_V5E) == []
+    check = proven_checker(k, shape, TPU_V3)
+    assert check({"X": 32}) and not check({"X": 16})  # 16 MiB == budget: fits
+
+
+def test_no_footprint_model_means_no_proofs():
+    def space(shape):
+        return _space_of({"X": (1, 2)})
+
+    @tunable(name="nofoot", space=space, heuristic=lambda s: {"X": 1},
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    assert footprint_bytes(k, {"N": 4}, {"X": 1}) is None
+    assert proven_violations(k, {"N": 4}, {"X": 1}, TPU_V3) == []
+    assert proven_checker(k, {"N": 4}, TPU_V3) is None
+
+
+def test_raising_footprint_model_yields_no_proof():
+    def space(shape):
+        return _space_of({"X": (1, 2)})
+
+    @tunable(name="badfoot", space=space, heuristic=lambda s: {"X": 1},
+             vmem_footprint=lambda s, cfg: 1 // 0,
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    assert proven_violations(k, {"N": 4}, {"X": 1}, TPU_V3) == []
+
+
+def test_install_device_constraints_shrinks_space():
+    k = _foot_kernel()
+    shape = {"N": 64}
+    sp = k.make_space(shape)
+    before = audit_space(sp).feasible
+    assert install_device_constraints(sp, k, shape, TPU_V3) == 1
+    labels = [c.label for c in sp.constraints]
+    assert any(lab.startswith("analyze:vmem<=") for lab in labels)
+    after = audit_space(sp).feasible
+    assert after == before - 2                        # X=32 and X=64 proved out
+
+
+def test_alignment_findings_are_info_only():
+    k = _foot_kernel()
+    shape = {"N": 64}                                 # f32 default: sublane 8
+    fs = alignment_findings(k, shape, {"BLOCK_M": 100, "BLOCK_N": 192,
+                                       "UNROLL": True, "X": 7}, TPU_V5E)
+    by_rule = {f.rule_id for f in fs}
+    assert by_rule == {"align-sublane", "align-mxu"}   # 100%8!=0; 192%128!=0
+    assert all(f.severity == "info" for f in fs)
+    # non-BLOCK params and bools are never flagged
+    assert all(f.data["param"].startswith("BLOCK") for f in fs)
+
+
+def test_dtype_threads_through_declared_footprints():
+    """The real kernels pass the shape dtype's element width to both the
+    analytical model and the footprint, so static proofs agree with the
+    model's VMEM cliff across dtypes."""
+    from repro.kernels.matmul.ops import GEMM
+    cfg = {"BLOCK_M": 512, "BLOCK_N": 512, "BLOCK_K": 512}
+    f32 = {"M": 2048, "N": 2048, "K": 2048, "dtype": "float32"}
+    bf16 = dict(f32, dtype="bfloat16")
+    assert footprint_bytes(GEMM, bf16, cfg) < footprint_bytes(GEMM, f32, cfg)
+    for shape in (f32, bf16):
+        over = proven_violations(GEMM, shape, cfg, TPU_V3)
+        t = GEMM.analytical_model(shape, cfg, TPU_V3)
+        # proof fires exactly where the model says infinite (the cliff)
+        assert bool(over) == math.isinf(t)
+
+
+# -- declaration lint rules ---------------------------------------------------
+
+def _rules(findings):
+    return {f.rule_id for f in findings}
+
+
+def test_lint_heuristic_raises():
+    def space(shape):
+        return _space_of({"X": (1, 2)})
+
+    @tunable(name="hraise", space=space,
+             heuristic=lambda s: {}[1], register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "heuristic-raises"]
+    assert hits and hits[0].severity == "error"
+
+
+def test_lint_heuristic_out_of_space():
+    def space(shape):
+        return _space_of({"X": (1, 2, 4)})
+
+    @tunable(name="hout", space=space,
+             heuristic=lambda s: {"X": 3, "GHOST": 1}, register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "heuristic-out-of-space"]
+    assert hits and hits[0].severity == "warning"
+    assert hits[0].data["extra"] == ["GHOST"]
+    assert hits[0].data["off_value"] == {"X": 3}
+
+
+def test_lint_heuristic_infeasible():
+    def space(shape):
+        return _space_of({"X": (1, 2, 4)},
+                         [(lambda x: x != 2, ("X",), "no-two")])
+
+    @tunable(name="hinf", space=space, heuristic=lambda s: {"X": 2},
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "heuristic-infeasible"]
+    assert hits and hits[0].severity == "warning"
+    assert "no-two" in hits[0].data["violated"]
+
+
+def test_lint_heuristic_over_vmem_per_profile():
+    k = _foot_kernel(name="hover", heuristic=lambda s: {"X": 64})
+    fs = kernel_findings(k, shapes=[{"N": 64}], profiles=[TPU_V3, TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "heuristic-over-vmem"]
+    # 64 MiB breaks the 16 MiB v3 budget but fits v5e's 128 MiB
+    assert [f.profile for f in hits] == ["tpu_v3"]
+    assert hits[0].severity == "warning"
+
+
+def test_lint_extended_not_superset():
+    def space(shape, extended=False):
+        if extended:
+            return _space_of({"X": (1, 2)})           # loses 4, drops Y
+        return _space_of({"X": (1, 2, 4), "Y": (True, False)})
+
+    @tunable(name="shrink", space=space, heuristic=lambda s: {"X": 1},
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "extended-not-superset"]
+    assert len(hits) == 2 and all(f.severity == "error" for f in hits)
+    assert {f.data["param"] for f in hits} == {"X", "Y"}
+
+
+def test_lint_bool_int_aliasing():
+    def space(shape):
+        return _space_of({"FLAG": (True, 1, 0)})
+
+    @tunable(name="alias", space=space, heuristic=lambda s: {"FLAG": True},
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "bool-int-aliasing"]
+    assert hits and hits[0].severity == "warning"
+    assert hits[0].data["param"] == "FLAG"
+
+
+def test_lint_missing_analytical_model():
+    def space(shape):
+        return _space_of({"X": (1, 2)})
+
+    def make(name, defaults=None):
+        @tunable(name=name, space=space, heuristic=lambda s: {"X": 1},
+                 defaults=defaults, register=False)
+        def k(shape, config):
+            return lambda: 0
+        return k
+
+    plain = kernel_findings(make("nomodel"), shapes=[{"N": 4}],
+                            profiles=[TPU_V5E])
+    hit = next(f for f in plain if f.rule_id == "missing-analytical-model")
+    assert hit.severity == "warning"
+    # defaults that request a cost-model path make the gap an error
+    needy = kernel_findings(make("needsmodel",
+                                 {"evaluator": "analytical"}),
+                            shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hit = next(f for f in needy if f.rule_id == "missing-analytical-model")
+    assert hit.severity == "error"
+
+
+def test_lint_space_build_error_and_no_default_shapes():
+    @tunable(name="nospace", space=lambda s: 1 // 0,
+             heuristic=lambda s: {}, register=False)
+    def broken(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(broken, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    assert any(f.rule_id == "space-build-error" and f.severity == "error"
+               for f in fs)
+
+    @tunable(name="shapeless", space=lambda s: _space_of({"X": (1,)}),
+             heuristic=lambda s: {"X": 1}, register=False)
+    def shapeless(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(shapeless, profiles=[TPU_V5E])    # no shapes at all
+    assert [f.rule_id for f in fs if f.severity == "info"] \
+        == ["no-default-shapes"]
+
+
+def test_lint_constraint_arity_on_prebuilt_space():
+    def space(shape):
+        sp = _space_of({"X": (1, 2)})
+        sp._constraints.append(Constraint(fn=lambda a, b: a == b,
+                                          names=("X",), label="bad-arity"))
+        return sp
+
+    @tunable(name="prearity", space=space, heuristic=lambda s: {"X": 1},
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V5E])
+    hits = [f for f in fs if f.rule_id == "constraint-arity"]
+    assert hits and hits[0].severity == "error"
+    assert "bad-arity" in hits[0].detail
+
+
+def test_lint_space_over_vmem_unusable_device():
+    k = _foot_kernel(name="allover", values=(32, 64),
+                     heuristic=lambda s: {"X": 32})
+    fs = kernel_findings(k, shapes=[{"N": 64}], profiles=[TPU_V3])
+    hits = [f for f in fs if f.rule_id == "space-over-vmem"]
+    # exhaustively enumerated and every feasible config over budget: error
+    assert hits and hits[0].severity == "error"
+    assert hits[0].profile == "tpu_v3"
+
+
+def test_lint_device_feasibility_fraction_is_info():
+    k = _foot_kernel()                                # part of space over v3
+    fs = kernel_findings(k, shapes=[{"N": 64}], profiles=[TPU_V3])
+    hits = [f for f in fs if f.rule_id == "device-feasibility"]
+    assert hits and hits[0].severity == "info"
+    assert hits[0].data["over"] == 2                  # X=32, X=64
+
+
+def test_lint_footprint_model_raises():
+    def space(shape):
+        return _space_of({"X": (1, 2)})
+
+    @tunable(name="fraise", space=space, heuristic=lambda s: {"X": 1},
+             vmem_footprint=lambda s, cfg: 1 // 0, register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    fs = kernel_findings(k, shapes=[{"N": 4}], profiles=[TPU_V3])
+    hits = [f for f in fs if f.rule_id == "footprint-model-raises"]
+    assert hits and hits[0].severity == "error"
+
+
+# -- satellite 3: the shipped registry sweeps clean ---------------------------
+
+def test_registry_sweep_is_clean_on_all_profiles():
+    """Every built-in tunable, audited at its default shapes against all
+    built-in device profiles, must produce zero error AND zero warning
+    findings (the `python -m repro.analyze --strict` CI gate)."""
+    _ensure_builtins()
+    assert len(REGISTRY.names()) >= 4
+    report = analyze_registry(profiles=list(PROFILES.values()))
+    assert report.errors == []
+    assert report.warnings == []
+    assert report.exit_code(strict=True) == 0
+    # the sweep is not vacuous: the advisory layer did fire
+    assert report.counts()["info"] > 0
+
+
+# -- engine: proven-infeasible pruning ----------------------------------------
+
+def _drive_engine(k, shape, profile, engine_cfg):
+    """bench_predict-style direct engine drive: the space deliberately has
+    NO device constraint, so device feasibility is the checker's call."""
+    space = k.make_space(shape)
+    spec = KernelSpec(name=f"{k.name}_drive", build=lambda cfg: (lambda: 0),
+                      analytical_model=lambda cfg, prof: k.analytical_model(
+                          shape, cfg, prof),
+                      meta=dict(shape))
+    eng = EvaluationEngine(
+        TPUAnalyticalEvaluator(noise_sigma=0.0, profile=profile),
+        spec, space, engine_cfg)
+    res = eng.run(make_strategy("full"), budget=None, seed=7)
+    return res, res.extra["engine"]
+
+
+def test_engine_proven_gate_saves_compiles_winner_identical():
+    k = _foot_kernel()
+    shape = {"N": 64}
+    check = proven_checker(k, shape, TPU_V3)
+    base_res, base_s = _drive_engine(k, shape, TPU_V3, EngineConfig())
+    prov_res, prov_s = _drive_engine(k, shape, TPU_V3,
+                                     EngineConfig(proven_checker=check))
+    assert base_s["proven_pruned"] == 0
+    assert prov_s["proven_pruned"] == 2               # X=32, X=64 proved out
+    assert prov_s["compile_calls"] == base_s["compile_calls"] - 2
+    # the proof never touches a winner: identical result, same evaluations
+    assert prov_res.best_config == base_res.best_config == {"X": 16}
+    assert prov_res.best_time == base_res.best_time
+    assert prov_s["evaluations"] == base_s["evaluations"]
+    # pruned configs were answered inf, recorded as failed trials
+    pruned = [t for t in prov_res.trials if t.config["X"] in (32, 64)]
+    assert pruned and all(not t.ok for t in pruned)
+
+
+def test_engine_proven_gate_has_no_survivor_guard():
+    """Unlike predicted pruning, a proof is not hedged: a batch that is
+    entirely proven-infeasible is entirely pruned (and the search simply
+    finds nothing)."""
+    k = _foot_kernel()
+    shape = {"N": 64}
+    cfg = EngineConfig(proven_checker=lambda c: ["always infeasible"])
+    res, stats = _drive_engine(k, shape, TPU_V3, cfg)
+    assert stats["proven_pruned"] == stats["evaluations"] > 0
+    assert stats["compile_calls"] == 0
+    assert res.best_config is None
+    assert all(not t.ok for t in res.trials)
+
+
+def test_engine_raising_checker_proves_nothing():
+    k = _foot_kernel()
+    shape = {"N": 64}
+    cfg = EngineConfig(proven_checker=lambda c: 1 // 0)
+    base_res, base_s = _drive_engine(k, shape, TPU_V3, EngineConfig())
+    res, stats = _drive_engine(k, shape, TPU_V3, cfg)
+    assert stats["proven_pruned"] == 0
+    assert res.best_config == base_res.best_config
+
+
+def test_engine_config_rejects_non_callable_checker():
+    with pytest.raises(TypeError, match="proven_checker"):
+        EngineConfig(proven_checker=42)
+
+
+# -- tuner integration --------------------------------------------------------
+
+def test_tune_analyze_attaches_analysis_and_checker(cache):
+    k = _foot_kernel()
+    out = tune_kernel(k, {"N": 64}, strategy="full", profile=TPU_V3,
+                      cache=cache, record=False, analyze=True)
+    a = out.analysis
+    assert a is not None
+    assert a["confidence"] == "exact"
+    assert a["proven_checker"] is True
+    assert a["feasible"] > 0 and a["examined"] >= a["feasible"]
+    assert set(a["findings"]) == {"error", "warning", "info"}
+    assert "analysis:" in out.report() and "proven checker on" in out.report()
+    off = tune_kernel(k, {"N": 64}, strategy="full", profile=TPU_V3,
+                      cache=cache, record=False, analyze=False)
+    assert off.analysis is None
+    assert "analysis:" not in off.report()
+
+
+def test_tune_analyze_off_is_trial_identical(cache):
+    k = _foot_kernel()
+    kw = dict(strategy="annealing", budget=5, profile=TPU_V3, cache=cache,
+              record=False, seed=3, warm_start=False)
+    base = tune_kernel(k, {"N": 64}, analyze=False, **kw)
+    on = tune_kernel(k, {"N": 64}, analyze=True, **kw)
+
+    def trials(o):
+        return [(t.config, t.time) for t in o.result.trials]
+
+    assert trials(base) == trials(on)
+    assert base.best_config == on.best_config
+
+
+def test_env_repro_analyze_drives_default(monkeypatch, cache):
+    k = _foot_kernel()
+    kw = dict(strategy="full", profile=TPU_V3, cache=cache, record=False)
+    assert tune_kernel(k, {"N": 64}, **kw).analysis is None   # default off
+    monkeypatch.setenv("REPRO_ANALYZE", "1")
+    assert tune_kernel(k, {"N": 64}, **kw).analysis is not None
+    # the strict-bool envknob contract: junk must raise, not pick a side
+    monkeypatch.setenv("REPRO_ANALYZE", "2")
+    with pytest.raises(TypeError, match="REPRO_ANALYZE"):
+        tune_kernel(k, {"N": 64}, **kw)
+
+
+def test_strict_env_raises_on_error_findings(monkeypatch):
+    t = Tuner(evaluator=TPUAnalyticalEvaluator(noise_sigma=0.0))
+    t.add_kernel(lambda cfg: (lambda: 0), name="broken",
+                 analytical_model=lambda cfg, prof: 1.0)
+    t.add_parameter("X", [1, 2])
+    t.add_constraint(lambda x: False, ["X"], "never")
+    monkeypatch.setenv("REPRO_ANALYZE_STRICT", "1")
+    with pytest.raises(ValueError, match="REPRO_ANALYZE_STRICT"):
+        t.tune(strategy="full", analyze=True)
+
+
+def test_strict_env_passes_warnings(monkeypatch, cache):
+    # dead value = warning severity: strict pre-search analysis only
+    # raises on errors, warnings tune anyway (the CLI --strict is harsher)
+    def space(shape):
+        return _space_of({"X": (1, 2, 3)},
+                         [(lambda x: x != 3, ("X",), "no-three")])
+
+    @tunable(name="warnonly", space=space, heuristic=lambda s: {"X": 1},
+             analytical_model=lambda s, cfg, prof: 1.0 / cfg["X"],
+             register=False)
+    def k(shape, config):
+        return lambda: 0
+
+    monkeypatch.setenv("REPRO_ANALYZE_STRICT", "1")
+    out = tune_kernel(k, {"N": 4}, strategy="full", cache=cache,
+                      record=False, analyze=True)
+    assert out.analysis["findings"]["warning"] >= 1
+    assert out.best_config == {"X": 2}
+
+
+# -- lookup chain: proven rejection -------------------------------------------
+
+def test_transfer_rejects_proven_infeasible_entry(cache):
+    k = _foot_kernel()
+    # a fleet-merged cache claims X=64 (64 MiB) for N=64 ... on a 16 MiB
+    # device.  It is space-feasible for N=128 but provably cannot run.
+    cache.record(k.name, k.key_for({"N": 64}), TPU_V3.name, {"X": 64},
+                 1e-3, "full", 4, shape={"N": 64})
+    assert transfer_config(k, {"N": 128}, profile=TPU_V3, cache=cache) is None
+    res = lookup_resolved(k, {"N": 128}, cache=cache, policy="transfer",
+                          profile=TPU_V3)
+    assert res.provenance == "heuristic"
+    # the identical entry under a 128 MiB profile transfers fine
+    cache.record(k.name, k.key_for({"N": 64}), TPU_V5E.name, {"X": 64},
+                 1e-3, "full", 4, shape={"N": 64})
+    moved = transfer_config(k, {"N": 128}, profile=TPU_V5E, cache=cache)
+    assert moved is not None and moved[0] == {"X": 64}
+
+
+class _StubPredictor:
+    """Minimal Predictor duck type that always suggests one fixed config."""
+
+    def __init__(self, cfg, name="stub"):
+        self._cfg, self.name = dict(cfg), name
+
+    def rank(self, configs, shape, profile):
+        return [0.0] * len(configs)
+
+    def suggest(self, shape, profile, k=1):
+        return [dict(self._cfg)]
+
+    def feasible(self, config, shape, profile):
+        return 1.0
+
+
+def test_predicted_step_rejects_proven_infeasible(cache):
+    k = _foot_kernel()
+    pred = _StubPredictor({"X": 64})
+    res = lookup_resolved(k, {"N": 64}, cache=cache, policy="transfer",
+                          profile=TPU_V3, predictor=pred)
+    assert res.provenance == "heuristic"              # proof beat the model
+    res = lookup_resolved(k, {"N": 64}, cache=cache, policy="transfer",
+                          profile=TPU_V5E, predictor=pred)
+    assert res.provenance == "predicted" and res.config == {"X": 64}
+
+
+# -- serve: hot-swap guard ----------------------------------------------------
+
+def test_serve_hot_swap_refuses_proven_infeasible_entry(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models.model import init_model
+    from repro.serve import (OnlineTuneConfig, ServeEngine,
+                             resolve_kernel_resolutions)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    cache = TuningCache(str(tmp_path / "serve_cache.json"))
+    for res in resolve_kernel_resolutions(cfg, 2, 128,
+                                          cache=cache).values():
+        cache.record(res.kernel, res.key, res.profile, res.config,
+                     1.0, "full", 1, shape=res.shape)
+    tuner_cfg = OnlineTuneConfig(
+        strategy="full",
+        evaluator_factory=lambda k, s, p: TPUAnalyticalEvaluator(
+            noise_sigma=0.0))
+    engine = ServeEngine(cfg, params, slots=2, max_len=128, cache=cache,
+                         online_tune=tuner_cfg)
+    try:
+        res = engine.kernel_resolutions["gemm"]
+        served = engine.kernel_configs["gemm"]
+        # a "better" (faster) entry whose declared footprint is ~hundreds
+        # of MiB: provably over every profile's VMEM — must NOT swap in
+        giant = dict(res.config, BLOCK_M=4096, BLOCK_N=4096, BLOCK_K=4096)
+        cache.record(res.kernel, res.key, res.profile, giant, 0.1,
+                     "full", 1, shape=res.shape)
+        assert engine.kernel_configs["gemm"] == served
+        # a feasible better entry still hot-swaps normally
+        better = dict(res.config, INNER_STEPS=2)
+        cache.record(res.kernel, res.key, res.profile, better, 0.05,
+                     "full", 1, shape=res.shape)
+        assert engine.kernel_configs["gemm"] == better
+    finally:
+        engine.close()
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def _broken_registry():
+    reg = KernelRegistry()
+
+    def space(shape):
+        return _space_of({"X": (1, 2)},
+                         [(lambda x: False, ("X",), "never")])
+
+    @tunable(name="busted", space=space, heuristic=lambda s: {"X": 1},
+             default_shapes=({"N": 4},), registry=reg)
+    def build(shape, config):
+        return lambda: 0
+
+    return reg
+
+
+def _warning_registry():
+    reg = KernelRegistry()
+
+    def space(shape):
+        return _space_of({"X": (1, 2, 3)},
+                         [(lambda x: x != 3, ("X",), "no-three")])
+
+    @tunable(name="deadval", space=space, heuristic=lambda s: {"X": 1},
+             analytical_model=lambda s, cfg, prof: 1.0,
+             vmem_footprint=lambda s, cfg: 1,
+             default_shapes=({"N": 4},), registry=reg)
+    def build(shape, config):
+        return lambda: 0
+
+    return reg
+
+
+def test_cli_shipped_registry_exits_zero(capsys):
+    rc = analyze_main(["--quiet"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["schema_version"] == 1
+    assert payload["counts"]["error"] == 0
+    assert payload["counts"]["warning"] == 0
+
+
+def test_cli_broken_registry_exits_nonzero_with_json(tmp_path, capsys):
+    out = tmp_path / "findings.json"
+    rc = analyze_main(["--json", str(out)], registry=_broken_registry())
+    assert rc == 1
+    captured = capsys.readouterr()
+    assert "busted" in captured.err                   # human listing on stderr
+    assert captured.out == ""                         # JSON went to the file
+    payload = json.loads(out.read_text())
+    rules = {f["rule_id"] for f in payload["findings"]}
+    assert "space-unsatisfiable" in rules
+    assert payload["counts"]["error"] >= 1
+
+
+def test_cli_strict_escalates_warnings(capsys):
+    reg = _warning_registry()
+    assert analyze_main(["--quiet"], registry=reg) == 0
+    capsys.readouterr()
+    assert analyze_main(["--quiet", "--strict"], registry=reg) == 1
+
+
+def test_cli_usage_errors_exit_two(capsys):
+    assert analyze_main(["--kernel", "no-such-kernel", "--quiet"],
+                        registry=_broken_registry()) == 2
+    assert analyze_main(["--profile", "no-such-profile", "--quiet"]) == 2
+
+
+# -- findings plumbing --------------------------------------------------------
+
+def test_finding_validates_severity():
+    with pytest.raises(ValueError, match="severity"):
+        Finding(rule_id="r", severity="fatal")
+    with pytest.raises(ValueError, match="rule_id"):
+        Finding(rule_id="", severity="error")
+
+
+def test_report_accounting_and_exit_codes():
+    rep = AnalysisReport()
+    assert rep.exit_code() == 0 and rep.exit_code(strict=True) == 0
+    rep.add(Finding(rule_id="a", severity="info", kernel="k"))
+    assert rep.exit_code(strict=True) == 0            # info never gates
+    rep.add(Finding(rule_id="b", severity="warning", kernel="k"))
+    assert rep.exit_code() == 0 and rep.exit_code(strict=True) == 1
+    rep.add(Finding(rule_id="c", severity="error", kernel="k"))
+    assert rep.exit_code() == 1
+    assert rep.counts() == {"error": 1, "warning": 1, "info": 1}
+    assert len(rep) == 3 and len(list(iter(rep))) == 3
+    round_trip = json.loads(rep.dumps())
+    assert [f["rule_id"] for f in round_trip["findings"]] == ["a", "b", "c"]
